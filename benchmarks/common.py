@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: graph corpus, timed runs, CSV emission."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import InMemoryEdgeStream, run_partitioner
+from repro.data import scaled_benchmark_graphs
+
+RUNNER_KW = {
+    "2psl": {"chunk_size": 1 << 14},
+    "2ps-hdrf": {"chunk_size": 4096},
+    "hdrf": {"chunk_size": 4096},
+    "greedy": {"chunk_size": 4096},
+    "dbh": {},
+    "grid": {},
+    "random": {},
+}
+
+
+@lru_cache(maxsize=1)
+def corpus():
+    graphs = scaled_benchmark_graphs(seed=7)
+    return {name: InMemoryEdgeStream(e) for name, e in graphs.items()}
+
+
+def timed_run(name: str, stream, k: int, *, repeats: int = 1, **kw):
+    """Warm-up once (compile), then time ``repeats`` runs; returns
+    (result, mean_seconds)."""
+    merged = {**RUNNER_KW.get(name, {}), **kw}
+    run_partitioner(name, stream, k, **merged)     # warm-up
+    times = []
+    res = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = run_partitioner(name, stream, k, **merged)
+        times.append(time.perf_counter() - t0)
+    return res, float(np.mean(times))
+
+
+def emit(rows, header):
+    """Print rows as CSV (the bench harness contract)."""
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

@@ -1,0 +1,36 @@
+"""Paper Figure 2: replication factor and run-time vs number of partitions
+on the OK-like graph — 2PS-L's run-time must stay ~flat in k while HDRF's
+grows linearly (claim C1)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+KS = (4, 32, 128, 256)
+ALGOS = ("2psl", "hdrf", "dbh")
+
+
+def run(fast: bool = False):
+    stream = corpus()["OK-mini"]
+    ks = KS[:2] if fast else KS
+    rows = []
+    for k in ks:
+        for algo in ALGOS:
+            res, secs = timed_run(algo, stream, k)
+            rows.append((f"fig2:{algo}", k,
+                         round(res.quality.replication_factor, 4),
+                         round(secs * 1e6 / stream.num_edges, 4),
+                         round(secs, 4)))
+    emit(rows, ("name", "k", "replication_factor", "us_per_edge",
+                "seconds"))
+    # claim C1: 2PS-L k=max within 3x of k=min; HDRF grows superlinearly
+    t2psl = {r[1]: r[4] for r in rows if r[0] == "fig2:2psl"}
+    thdrf = {r[1]: r[4] for r in rows if r[0] == "fig2:hdrf"}
+    ratio_2psl = t2psl[ks[-1]] / t2psl[ks[0]]
+    ratio_hdrf = thdrf[ks[-1]] / thdrf[ks[0]]
+    print(f"# C1: 2PS-L runtime ratio k={ks[-1]}/k={ks[0]} = "
+          f"{ratio_2psl:.2f}x; HDRF = {ratio_hdrf:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

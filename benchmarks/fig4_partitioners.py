@@ -1,0 +1,27 @@
+"""Paper Figure 4: replication factor / run-time / balance for every
+partitioner across the graph corpus (claim C2)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+ALGOS = ("2psl", "2ps-hdrf", "hdrf", "greedy", "dbh", "grid", "random")
+
+
+def run(fast: bool = False, k: int = 32):
+    rows = []
+    graphs = corpus()
+    names = list(graphs)[:2] if fast else list(graphs)
+    for gname in names:
+        stream = graphs[gname]
+        for algo in ALGOS:
+            res, secs = timed_run(algo, stream, k)
+            rows.append((f"fig4:{gname}:{algo}", k,
+                         round(res.quality.replication_factor, 4),
+                         round(res.quality.balance, 4),
+                         round(secs, 4)))
+    emit(rows, ("name", "k", "replication_factor", "alpha", "seconds"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Figure 5: relative run-time of 2PS-L's phases (degree pass,
+clustering, partitioning) per graph (claim C3: degrees 7-20%, clustering
+16-22%, partitioning 58-77% at k=32)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+
+def run(fast: bool = False, k: int = 32):
+    rows = []
+    graphs = corpus()
+    names = list(graphs)[:2] if fast else list(graphs)
+    for gname in names:
+        res, _ = timed_run("2psl", graphs[gname], k)
+        t = res.timings
+        partition = t.get("mapping", 0) + t.get("prepartition", 0) \
+            + t.get("scoring", 0)
+        total = t.get("degrees", 0) + t.get("clustering", 0) + partition
+        rows.append((f"fig5:{gname}", k,
+                     round(t.get("degrees", 0) / total, 3),
+                     round(t.get("clustering", 0) / total, 3),
+                     round(partition / total, 3),
+                     round(total, 4)))
+    emit(rows, ("name", "k", "degrees_frac", "clustering_frac",
+                "partitioning_frac", "total_s"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

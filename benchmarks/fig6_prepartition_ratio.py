@@ -1,0 +1,28 @@
+"""Paper Figure 6: fraction of edges handled by pre-partitioning vs
+scoring (claim C4: community-rich web graphs pre-partition far more than
+social graphs)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+
+def run(fast: bool = False, k: int = 32):
+    rows = []
+    graphs = corpus()
+    names = list(graphs)[:2] if fast else list(graphs)
+    for gname in names:
+        res, _ = timed_run("2psl", graphs[gname], k)
+        rows.append((f"fig6:{gname}", k,
+                     round(res.extras["prepartition_ratio"], 4),
+                     round(1 - res.extras["prepartition_ratio"], 4)))
+    emit(rows, ("name", "k", "prepartitioned_frac", "scored_frac"))
+    web = [r[2] for r in rows if "IT" in r[0] or "UK" in r[0]]
+    soc = [r[2] for r in rows if any(s in r[0] for s in ("OK", "TW", "FR"))]
+    if web and soc:
+        print(f"# C4: web graphs prepartition {min(web):.2f}+ vs social "
+              f"{max(soc):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Figures 7+8: replication factor and run-time vs number of
+clustering (re-)streaming passes (claim C5: small RF gain, sub-linear
+run-time growth)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+PASSES = (1, 2, 4, 8)
+
+
+def run(fast: bool = False, k: int = 32):
+    stream = corpus()["OK-mini"]
+    passes = PASSES[:2] if fast else PASSES
+    base_rf = base_t = None
+    rows = []
+    for p in passes:
+        res, secs = timed_run("2psl", stream, k, cluster_passes=p)
+        rf = res.quality.replication_factor
+        if base_rf is None:
+            base_rf, base_t = rf, secs
+        rows.append((f"fig7_8:passes={p}", k,
+                     round(rf, 4), round(rf / base_rf, 4),
+                     round(secs, 4), round(secs / base_t, 4)))
+    emit(rows, ("name", "k", "replication_factor", "rf_vs_1pass",
+                "seconds", "time_vs_1pass"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Figure 9: 2PS-HDRF (k-way HDRF scoring in phase 2) vs 2PS-L,
+normalized (claim C6: better RF, but run-time grows with k)."""
+from __future__ import annotations
+
+from .common import corpus, emit, timed_run
+
+KS = (4, 32, 128)
+
+
+def run(fast: bool = False):
+    stream = corpus()["OK-mini"]
+    ks = KS[:2] if fast else KS
+    rows = []
+    for k in ks:
+        res_l, t_l = timed_run("2psl", stream, k)
+        res_h, t_h = timed_run("2ps-hdrf", stream, k)
+        rows.append((f"fig9:k={k}", k,
+                     round(res_h.quality.replication_factor
+                           / res_l.quality.replication_factor, 4),
+                     round(t_h / t_l, 4),
+                     round(res_l.quality.replication_factor, 4),
+                     round(res_h.quality.replication_factor, 4)))
+    emit(rows, ("name", "k", "rf_ratio_hdrf_over_l", "time_ratio",
+                "rf_2psl", "rf_2ps_hdrf"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,166 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_flops_per_device / peak_flops(dtype)
+  memory term     = HLO_bytes_per_device / HBM_BW
+  collective term = wire_bytes_per_device / ICI_BW
+  dominant        = argmax of the three  (what §Perf iterates on)
+  model_flops     = analytic 6*N*D-style estimate (global)
+  useful_ratio    = model_flops / (HLO_flops_per_device * n_devices)
+
+TPU v5e constants per the assignment: 197 TFLOP/s bf16 (98.5 f32),
+819 GB/s HBM, ~50 GB/s/link ICI (45 GB/s effective used).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_BF16 = 197e12
+PEAK_F32 = 98.5e12
+HBM_BW = 819e9
+ICI_BW = 45e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "artifacts", "roofline.md")
+
+
+def model_flops(arch: str, shape: str) -> tuple[float, str]:
+    """Analytic useful-FLOPs estimate (global, per step)."""
+    from repro.configs import get_arch
+    shape = shape.split("+")[0]     # hillclimb variants: "<shape>+<variant>"
+    spec = get_arch(arch)
+    cfg = spec.config_for_shape(shape)
+    sh = spec.shapes[shape]
+
+    if spec.family == "lm":
+        n_act = cfg.num_active_params()
+        if sh["kind"] == "train":
+            toks = sh["batch"] * sh["seq"]
+            return 6.0 * n_act * toks, "6*N_active*tokens"
+        if sh["kind"] == "prefill":
+            toks = sh["batch"] * sh["seq"]
+            attn = 2.0 * 2 * sh["batch"] * sh["seq"] ** 2 \
+                * cfg.n_heads * cfg.head_dim * cfg.n_layers / 2
+            return 2.0 * n_act * toks + attn, "2*N_active*tokens + attn"
+        # decode: one token per sequence + full-cache attention read
+        toks = sh["batch"]
+        attn = 2.0 * 2 * toks * sh["seq"] * cfg.n_heads * cfg.head_dim \
+            * cfg.n_layers
+        return 2.0 * n_act * toks + attn, "2*N_active + cache attn"
+
+    if spec.family == "gnn":
+        d = getattr(cfg, "d_hidden", getattr(cfg, "mul", 32))
+        L = cfg.n_layers
+        if sh["kind"] == "sampled":
+            r, f = sh["batch_nodes"], sh["fanout"]
+            N = r * (1 + f[0] + f[0] * f[1])
+            E = r * (f[0] + f[0] * f[1])
+        elif sh["kind"] == "molecule":
+            N = sh["batch"] * sh["n_nodes"]
+            E = sh["batch"] * sh["n_edges"]
+        else:
+            N, E = sh["n_nodes"], sh["n_edges"]
+        # per layer: node transform (2*N*d^2) + message agg (2*E*d); x3 train
+        return 3.0 * L * (2.0 * N * d * d + 2.0 * E * d), \
+            "3*L*(2*N*d^2 + 2*E*d)"
+
+    # recsys
+    g, e, T = cfg.gru_dim, cfg.embed_dim, cfg.seq_len
+    if sh["kind"] == "retrieval":
+        M = sh["n_candidates"]
+        mlp = sum(a * b for a, b in zip((g + e,) + cfg.mlp_dims,
+                                        cfg.mlp_dims + (1,)))
+        return 2.0 * M * (T * g + T * e + mlp), "2*M*(attn+mlp)"
+    B = sh["batch"]
+    recur = 2.0 * T * (e * 3 * g + g * 3 * g) + 2.0 * T * (g * 3 * g + g * 3 * g)
+    mlp = 2.0 * sum(a * b for a, b in zip((g + e,) + cfg.mlp_dims,
+                                          cfg.mlp_dims + (1,)))
+    mult = 3.0 if sh["kind"] == "train" else 1.0
+    return mult * B * (recur + mlp), "B*(gru+augru+mlp)"
+
+
+def analyze(records=None):
+    if records is None:
+        records = []
+        for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+            with open(path) as f:
+                records.append(json.load(f))
+    rows = []
+    for r in records:
+        from repro.configs import get_arch
+        cfg = get_arch(r["arch"]).make_config()
+        dtype = getattr(cfg, "dtype", "float32")
+        peak = PEAK_BF16 if dtype == "bfloat16" else PEAK_F32
+        t_comp = r["flops_per_device"] / peak
+        t_mem = r["bytes_per_device"] / HBM_BW
+        t_coll = r["collectives"]["total_bytes"] / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf, formula = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * r["n_devices"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        bound = max(terms.values())
+        # roofline fraction: useful work at peak vs the bound term
+        frac = (mf / r["n_devices"] / peak) / bound if bound else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": mf, "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "hbm_fit": r["memory"]["peak_estimate_bytes"] < 16e9,
+            "formula": formula,
+        })
+    return rows
+
+
+def advise(row) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("shrink collective bytes: fold resharding (all-gathers) "
+                "into shard_map with fused partial compute + psum")
+    if d == "memory":
+        return ("cut HBM traffic: fuse elementwise chains / larger block "
+                "tiles; check useful_ratio for gather/scatter waste")
+    return ("compute-bound: raise useful_ratio (drop redundant remat / "
+            "replicated compute) until MFU approaches the fraction")
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {'y' if r['hbm_fit'] else 'N'} |")
+    return "\n".join(out)
+
+
+def run(fast: bool = False):
+    rows = analyze()
+    if not rows:
+        print("# roofline: no dry-run artifacts found (run "
+              "repro.launch.dryrun first)")
+        return []
+    print("name,dominant,t_compute_s,t_memory_s,t_collective_s,"
+          "useful_ratio,roofline_fraction")
+    for r in rows:
+        print(f"roofline:{r['arch']}:{r['shape']}:{r['mesh']},"
+              f"{r['dominant']},{r['t_compute_s']:.4e},"
+              f"{r['t_memory_s']:.4e},{r['t_collective_s']:.4e},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}")
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(to_markdown(rows) + "\n")
+    print(f"# wrote {OUT_MD}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,...`` CSV blocks per experiment plus claim-check comments,
+then the roofline summary if dry-run artifacts exist.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced ks/graphs for CI")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_k_sweep, fig4_partitioners,
+                            fig5_phase_breakdown, fig6_prepartition_ratio,
+                            fig7_8_restreaming, fig9_2ps_hdrf, roofline,
+                            table4_end_to_end, table5_io)
+    modules = {
+        "fig2": fig2_k_sweep, "fig4": fig4_partitioners,
+        "fig5": fig5_phase_breakdown, "fig6": fig6_prepartition_ratio,
+        "fig7_8": fig7_8_restreaming, "fig9": fig9_2ps_hdrf,
+        "table4": table4_end_to_end, "table5": table5_io,
+        "roofline": roofline,
+    }
+    selected = (args.only.split(",") if args.only else list(modules))
+    failures = []
+    for name in selected:
+        print(f"==== {name} ====")
+        t0 = time.time()
+        try:
+            modules[name].run(fast=args.fast)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} finished in {time.time() - t0:.1f}s\n")
+    if failures:
+        print("FAILED:", ",".join(failures))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

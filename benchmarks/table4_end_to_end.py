@@ -1,0 +1,79 @@
+"""Paper Table IV: end-to-end = partitioning time + distributed graph
+processing time (claim C7: neither the best RF nor the fastest partitioner
+wins end-to-end; the balanced one does).
+
+Graph processing = 100 PageRank iterations, executed for real with JAX
+segment ops; the distributed component is modeled per partitioner from its
+measured replication factor:
+
+  t_process = n_iter * (t_compute_measured + sync_bytes / NET_BW)
+
+with sync_bytes = 2 * (RF - 1) * |V| * 8B per iteration (rank + degree
+exchange per extra replica) and NET_BW = 10 GbE as in the paper's cluster.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import corpus, emit, timed_run
+
+NET_BW = 10e9 / 8           # 10 GbE in bytes/s
+N_ITER = 100
+ALGOS = ("2psl", "2ps-hdrf", "hdrf", "dbh", "random")
+
+
+def pagerank(edges, num_vertices, n_iter=N_ITER, damping=0.85):
+    src = jnp.asarray(edges[:, 0])
+    dst = jnp.asarray(edges[:, 1])
+    deg = jnp.maximum(
+        jax.ops.segment_sum(jnp.ones_like(src, jnp.float32), src,
+                            num_segments=num_vertices), 1.0)
+
+    @jax.jit
+    def step(rank):
+        contrib = rank[src] / deg[src]
+        agg = jax.ops.segment_sum(contrib, dst, num_segments=num_vertices)
+        return (1 - damping) / num_vertices + damping * agg
+
+    rank = jnp.full((num_vertices,), 1.0 / num_vertices)
+    rank = step(rank)                       # compile
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        rank = step(rank)
+    rank.block_until_ready()
+    return rank, time.perf_counter() - t0
+
+
+def run(fast: bool = False, k: int = 32):
+    graphs = corpus()
+    names = ["OK-mini"] if fast else ["OK-mini", "UK-mini"]
+    rows = []
+    for gname in names:
+        stream = graphs[gname]
+        edges = np.concatenate(list(stream.iter_chunks(1 << 20)))
+        _, t_compute = pagerank(edges, stream.num_vertices,
+                                n_iter=10 if fast else N_ITER)
+        for algo in ALGOS:
+            res, t_part = timed_run(algo, stream, k)
+            rf = res.quality.replication_factor
+            sync = 2 * max(rf - 1, 0) * stream.num_vertices * 8
+            t_proc = t_compute + (10 if fast else N_ITER) * sync / NET_BW
+            rows.append((f"table4:{gname}:{algo}", k, round(rf, 3),
+                         round(t_part, 3), round(t_proc, 3),
+                         round(t_part + t_proc, 3)))
+    emit(rows, ("name", "k", "replication_factor", "partition_s",
+                "pagerank_s", "total_s"))
+    for gname in names:
+        sub = [r for r in rows if f":{gname}:" in r[0]]
+        best = min(sub, key=lambda r: r[5])
+        print(f"# C7 best end-to-end on {gname}: {best[0].split(':')[-1]} "
+              f"({best[5]}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Out-of-core demonstration: partition a graph straight from disk, multiple
+passes over a memmap'd binary edge list, and show the paper's headline
+scaling: 2PS-L runtime is flat in k while HDRF grows linearly.
+
+    PYTHONPATH=src python examples/out_of_core_partition.py
+"""
+import os
+import tempfile
+import time
+
+from repro.core import MemmapEdgeStream, run_2psl, run_dbh, run_hdrf
+from repro.data import rmat_graph
+
+
+def main():
+    edges = rmat_graph(14, edge_factor=16, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "graph.bin")
+        stream = MemmapEdgeStream.write(path, edges)
+        print(f"wrote {os.path.getsize(path)/2**20:.1f} MiB edge list "
+              f"(|V|={stream.num_vertices:,} |E|={stream.num_edges:,})\n")
+        print(f"{'k':>5s} {'2PS-L s':>9s} {'HDRF s':>9s} {'DBH s':>9s} "
+              f"{'rf(2PS-L)':>10s} {'rf(HDRF)':>9s} {'rf(DBH)':>8s}")
+        for k in (4, 32, 128):
+            rows = {}
+            for name, runner, kw in [
+                ("2psl", run_2psl, {"chunk_size": 1 << 15}),
+                ("hdrf", run_hdrf, {"chunk_size": 4096}),
+                ("dbh", run_dbh, {}),
+            ]:
+                runner(stream, k, **kw)        # warm-up compile
+                t0 = time.perf_counter()
+                res = runner(stream, k, **kw)
+                rows[name] = (time.perf_counter() - t0,
+                              res.quality.replication_factor)
+            print(f"{k:5d} {rows['2psl'][0]:9.2f} {rows['hdrf'][0]:9.2f} "
+                  f"{rows['dbh'][0]:9.2f} {rows['2psl'][1]:10.3f} "
+                  f"{rows['hdrf'][1]:9.3f} {rows['dbh'][1]:8.3f}")
+        print("\n2PS-L column is ~flat in k (the paper's O(|E|) claim); "
+              "HDRF grows with k (O(|E|*k)).")
+
+
+if __name__ == "__main__":
+    main()

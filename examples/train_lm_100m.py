@@ -1,0 +1,64 @@
+"""End-to-end LM training driver: ~100M-parameter transformer, a few hundred
+steps on the synthetic token stream, with fault-tolerant checkpointing.
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 300]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data.lm_data import TokenStream
+from repro.launch import steps as S
+from repro.models.transformer import TransformerConfig, init_params
+from repro.optim import adamw_init
+from repro.runtime import StepWatchdog, TrainLoopRunner
+
+
+def lm_100m() -> TransformerConfig:
+    # 12L x 768 with a 32k vocab ~= 110M params (GPT-2-small class)
+    return TransformerConfig(
+        name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=3072, vocab=32768, norm="rmsnorm", act="silu", gated_mlp=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    print(f"model: {cfg.name}  params={cfg.num_params()/1e6:.1f}M")
+    params = init_params(cfg, jax.random.key(0))
+    state = {"params": params, "opt": adamw_init(params)}
+    step = jax.jit(S.make_lm_train_step(cfg, lr=6e-4))
+
+    def batch_fn(i):
+        s = TokenStream(cfg.vocab, args.batch, args.seq, seed=1000 + i)
+        return {k: jnp.asarray(v) for k, v in s.next_batch().items()}
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        ckpt = CheckpointManager(ckpt_dir, interval=100)
+        runner = TrainLoopRunner(step, batch_fn, ckpt,
+                                 watchdog=StepWatchdog())
+        t0 = time.perf_counter()
+        state, metrics = runner.run(state, args.steps)
+        dt = time.perf_counter() - t0
+
+    losses = [m["loss"] for m in metrics]
+    toks = args.steps * args.batch * args.seq
+    print(f"{args.steps} steps, {toks/dt:,.0f} tok/s: "
+          f"loss {losses[0]:.3f} -> {min(losses):.3f}")
+    if args.steps >= 200:     # below that, warmup barely ramps the lr
+        assert min(losses) < losses[0] - 0.5, "loss should fall >0.5 nats"
+    else:
+        assert min(losses) < losses[0], "loss should fall"
+
+
+if __name__ == "__main__":
+    main()

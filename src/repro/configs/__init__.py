@@ -1,0 +1,7 @@
+"""Architecture registry: one module per assigned arch, selectable via
+``--arch <id>`` in the launchers."""
+from .base import ARCHS, ArchSpec, get_arch, register
+
+# importing the modules populates the registry
+from . import (qwen1_5_110b, starcoder2_3b, minitron_8b, qwen2_moe_a2_7b,
+               olmoe_1b_7b, egnn, nequip, gin_tu, gatedgcn, dien)  # noqa: F401

@@ -1,0 +1,30 @@
+"""qwen1.5-110b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064, QKV bias.  [hf:Qwen/Qwen1.5-110B; hf]"""
+from repro.models.transformer import TransformerConfig
+from .base import ArchSpec, LM_SHAPES, register
+
+
+def full() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-110b", n_layers=80, d_model=8192, n_heads=64,
+        n_kv_heads=8, d_ff=49152, vocab=152064, qkv_bias=True,
+        norm="rmsnorm", act="silu", gated_mlp=True, rope_theta=1e6,
+        dtype="bfloat16", remat="full")
+
+
+def smoke() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-110b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=192, vocab=128, qkv_bias=True,
+        norm="rmsnorm", act="silu", gated_mlp=True)
+
+
+register(ArchSpec(
+    arch_id="qwen1.5-110b", family="lm", make_config=full,
+    make_smoke_config=smoke,
+    # 8 gradient-accumulation microbatches: the 80-layer saved-residual
+    # stack at full batch is ~15 GiB/device; microbatching brings the whole
+    # step under the 16 GB v5e HBM (see EXPERIMENTS.md dry-run table)
+    shapes={**LM_SHAPES,
+            "train_4k": {**LM_SHAPES["train_4k"], "microbatches": 8}},
+    notes="largest dense LM cell; exercises hybrid FSDP+TP"))

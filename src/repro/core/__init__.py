@@ -1,0 +1,24 @@
+"""2PS-L: out-of-core edge partitioning at linear run-time (the paper's core)."""
+from .clustering import (ClusteringResult, cluster_in_memory_scan,
+                         cluster_sequential, default_max_vol,
+                         streaming_clustering)
+from .mapping import map_clusters_lpt, map_clusters_lpt_jax
+from .metrics import (PartitionQuality, capacity, quality_from_assignment,
+                      quality_from_bitmatrix)
+from .pipeline import (PARTITIONERS, PartitionRunResult, run_2ps_hdrf,
+                       run_2psl, run_dbh, run_greedy, run_grid, run_hdrf,
+                       run_partitioner, run_random)
+from .stream import (BYTES_PER_EDGE, EdgeStream, InMemoryEdgeStream,
+                     MemmapEdgeStream, ThrottledEdgeStream, compute_degrees)
+
+__all__ = [
+    "ClusteringResult", "cluster_in_memory_scan", "cluster_sequential",
+    "default_max_vol", "streaming_clustering", "map_clusters_lpt",
+    "map_clusters_lpt_jax", "PartitionQuality", "capacity",
+    "quality_from_assignment", "quality_from_bitmatrix", "PARTITIONERS",
+    "PartitionRunResult", "run_2ps_hdrf", "run_2psl", "run_dbh",
+    "run_greedy", "run_grid",
+    "run_hdrf", "run_partitioner", "run_random", "BYTES_PER_EDGE",
+    "EdgeStream", "InMemoryEdgeStream", "MemmapEdgeStream",
+    "ThrottledEdgeStream", "compute_degrees",
+]

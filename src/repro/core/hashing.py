@@ -1,0 +1,43 @@
+"""Deterministic integer hashing used by the stateless partitioners.
+
+The paper's stateless baselines (DBH, Grid) and 2PS-L's capacity-overflow
+fallback hash on 32-bit vertex IDs.  We use the `lowbias32` murmur-style
+finalizer so numpy and jax produce bit-identical assignments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_M1 = 0x7FEB352D
+_M2 = 0x846CA68B
+
+
+def hash_u32_np(x: np.ndarray, seed: int = 0) -> np.ndarray:
+    """lowbias32 finalizer over uint32, numpy."""
+    h = x.astype(np.uint32) ^ np.uint32(seed * 0x9E3779B9 & 0xFFFFFFFF)
+    h ^= h >> np.uint32(16)
+    h = (h * np.uint32(_M1)) & np.uint32(0xFFFFFFFF)
+    h ^= h >> np.uint32(15)
+    h = (h * np.uint32(_M2)) & np.uint32(0xFFFFFFFF)
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def hash_u32_jnp(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """lowbias32 finalizer over uint32, jax (bit-identical to numpy version)."""
+    h = x.astype(jnp.uint32) ^ jnp.uint32(seed * 0x9E3779B9 & 0xFFFFFFFF)
+    h ^= h >> 16
+    h = h * jnp.uint32(_M1)
+    h ^= h >> 15
+    h = h * jnp.uint32(_M2)
+    h ^= h >> 16
+    return h
+
+
+def hash_mod_np(x: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    return (hash_u32_np(x, seed) % np.uint32(k)).astype(np.int32)
+
+
+def hash_mod_jnp(x: jnp.ndarray, k: int, seed: int = 0) -> jnp.ndarray:
+    return (hash_u32_jnp(x, seed) % jnp.uint32(k)).astype(jnp.int32)

@@ -1,0 +1,58 @@
+"""2PS-L Phase 2, Step 1 — clusters -> partitions via Graham's sorted list
+scheduling (LPT, a 4/3-approximation of makespan on identical machines).
+
+Host path uses a heap (O(C log k)); a ``lax.scan`` device path exists for the
+in-memory pipeline and for property tests against the host version.
+"""
+from __future__ import annotations
+
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import hash_mod_np
+
+
+def map_clusters_lpt(vol: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Sorted-list-scheduling of clusters onto k partitions.
+
+    Returns (c2p, part_volumes).  Clusters with volume <= 0 (empty / isolated
+    singletons) are hashed — they carry no edges, so their mapping only has to
+    be *defined*, not balanced.
+    """
+    vol = np.asarray(vol)
+    c2p = hash_mod_np(np.arange(len(vol), dtype=np.uint32), k)
+    active = np.nonzero(vol > 0)[0]
+    order = active[np.argsort(-vol[active], kind="stable")]
+    loads = [(0, p) for p in range(k)]
+    heapq.heapify(loads)
+    for c in order:
+        load, p = heapq.heappop(loads)
+        c2p[c] = p
+        heapq.heappush(loads, (load + int(vol[c]), p))
+    part_vol = np.zeros(k, dtype=np.int64)
+    np.add.at(part_vol, c2p[active], vol[active])
+    return c2p.astype(np.int32), part_vol
+
+
+def map_clusters_lpt_jax(vol: jnp.ndarray, k: int):
+    """Device LPT: scan over volume-sorted clusters, argmin running loads.
+    O(C*k) work — fine because C << |V| on natural graphs; matches the host
+    heap version exactly (ties broken toward the lowest partition id)."""
+    C = vol.shape[0]
+    order = jnp.argsort(-vol, stable=True)
+
+    def body(loads, c):
+        p = jnp.argmin(loads)  # lowest index wins ties, like the heap
+        take = vol[c] > 0
+        loads = loads.at[p].add(jnp.where(take, vol[c], 0))
+        return loads, jnp.where(take, p.astype(jnp.int32), -1)
+
+    loads, assigned = jax.lax.scan(body, jnp.zeros((k,), jnp.int32), order)
+    c2p = jnp.zeros((C,), jnp.int32).at[order].set(assigned)
+    from .hashing import hash_mod_jnp
+    fallback = hash_mod_jnp(jnp.arange(C, dtype=jnp.uint32), k)
+    c2p = jnp.where(c2p < 0, fallback, c2p)
+    return c2p, loads

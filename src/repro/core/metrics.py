@@ -1,0 +1,60 @@
+"""Partitioning quality metrics (paper §II-A)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import bitops
+
+
+@dataclass
+class PartitionQuality:
+    replication_factor: float      # RF = (1/|V|) sum_i |V(p_i)|
+    balance: float                 # max_i |p_i| / (|E|/k)  (the measured alpha)
+    max_partition: int
+    min_partition: int
+    part_sizes: np.ndarray
+    num_vertices_covered: int
+
+    def __repr__(self):
+        return (f"PartitionQuality(rf={self.replication_factor:.4f}, "
+                f"alpha={self.balance:.4f}, sizes=[{self.min_partition}"
+                f"..{self.max_partition}])")
+
+
+def quality_from_bitmatrix(v2p_bits: np.ndarray, part_sizes: np.ndarray,
+                           num_edges: int) -> PartitionQuality:
+    k = len(part_sizes)
+    replicas = bitops.popcount_np(v2p_bits)
+    covered = int((replicas > 0).sum())
+    denom = max(covered, 1)
+    rf = float(replicas.sum()) / denom
+    return PartitionQuality(
+        replication_factor=rf,
+        balance=float(part_sizes.max()) / (num_edges / k) if num_edges else 0.0,
+        max_partition=int(part_sizes.max()),
+        min_partition=int(part_sizes.min()),
+        part_sizes=np.asarray(part_sizes),
+        num_vertices_covered=covered,
+    )
+
+
+def quality_from_assignment(edges: np.ndarray, assignment: np.ndarray,
+                            num_vertices: int, k: int) -> PartitionQuality:
+    """Recompute quality from scratch given edge->partition assignment.
+
+    This is the *oracle* metric path: it does not trust any incrementally
+    maintained state, so tests can cross-check the streaming bookkeeping.
+    """
+    assert assignment.min() >= 0 and assignment.max() < k
+    bm = bitops.alloc_np(num_vertices, k)
+    bitops.set_np(bm, edges[:, 0].astype(np.int64), assignment)
+    bitops.set_np(bm, edges[:, 1].astype(np.int64), assignment)
+    sizes = np.bincount(assignment, minlength=k)
+    return quality_from_bitmatrix(bm, sizes, len(edges))
+
+
+def capacity(num_edges: int, k: int, alpha: float) -> int:
+    """Hard per-partition edge cap  ceil(alpha * |E| / k)."""
+    return int(np.ceil(alpha * num_edges / k))

@@ -1,0 +1,305 @@
+"""2PS-L Phase 2 — streaming partitioning (paper Algorithm 2).
+
+Bulk-synchronous chunked implementation of the three steps:
+
+  Step 1  clusters -> partitions  (mapping.py, Graham LPT)
+  Step 2  pre-partitioning        (_prepartition_chunk)
+  Step 3  linear 2-candidate scoring for remaining edges (_score_chunk)
+
+The hard balance cap ``|p| <= ceil(alpha*|E|/k)`` is enforced *exactly* even
+under vectorization via per-chunk prefix ranks: within a chunk, edges
+targeting partition p are ranked in stream order and only the first
+``remaining_capacity(p)`` are admitted; the rest overflow down the paper's
+fallback chain (degree-hash, then least-loaded — the "last resort" the paper
+describes in prose).  The least-loaded round is a bounded ``while_loop``:
+each iteration fills the currently least-loaded partition, and since
+``k * cap >= |E|`` it terminates with every edge placed.
+
+All state lives on device and is O(|V|*k) bits + O(|V|) words, so the host
+only streams edge chunks — the out-of-core property of the paper.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops
+from .hashing import hash_mod_jnp
+from .scoring import twopsl_score, hdrf_score
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _chunk_rank(target: jnp.ndarray, eligible: jnp.ndarray, k: int):
+    """Stream-order rank of each eligible edge among same-target edges."""
+    C = target.shape[0]
+    key = jnp.where(eligible, target, jnp.int32(k))
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]])
+    start_pos = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank_s = idx - start_pos
+    rank = jnp.zeros((C,), jnp.int32).at[order].set(rank_s)
+    return rank
+
+
+def _ranked_admit(target, eligible, sizes, cap, k):
+    """Admit eligible edges up to per-partition remaining capacity (stream
+    order), returning (admitted_mask, new_sizes)."""
+    rank = _chunk_rank(target, eligible, k)
+    remaining = jnp.maximum(cap - sizes, 0)
+    ok = eligible & (rank < remaining[jnp.clip(target, 0, k - 1)])
+    sizes = sizes.at[jnp.where(ok, target, k)].add(
+        jnp.ones_like(target), mode="drop")
+    return ok, sizes
+
+
+def _least_loaded_rounds(assignment, pending, sizes, cap, k):
+    """Bounded while_loop filling least-loaded partitions until ``pending``
+    edges are all assigned."""
+
+    def cond(carry):
+        assignment, sizes, i = carry
+        return jnp.any(pending & (assignment < 0)) & (i <= k)
+
+    def body(carry):
+        assignment, sizes, i = carry
+        un = pending & (assignment < 0)
+        t = jnp.argmin(sizes).astype(jnp.int32)
+        rem = jnp.maximum(cap - sizes[t], 0)
+        rank = jnp.cumsum(un.astype(jnp.int32)) - 1
+        take = un & (rank < rem)
+        assignment = jnp.where(take, t, assignment)
+        sizes = sizes.at[t].add(take.sum(dtype=jnp.int32))
+        return assignment, sizes, i + 1
+
+    assignment, sizes, _ = jax.lax.while_loop(
+        cond, body, (assignment, sizes, jnp.int32(0)))
+    return assignment, sizes
+
+
+def _apply_bits(bits, edges, assignment):
+    assigned = assignment >= 0
+    vv = jnp.concatenate([edges[:, 0], edges[:, 1]])
+    pp = jnp.concatenate([assignment, assignment])
+    mm = jnp.concatenate([assigned, assigned])
+    return bitops.set_jnp(bits, vv, jnp.clip(pp, 0, None), mask=mm)
+
+
+# ---------------------------------------------------------------------------
+# Step 2: pre-partitioning
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("k",),
+                   donate_argnums=(0, 1))
+def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
+    """Assign every edge whose endpoints share a cluster (or whose clusters
+    share a partition) to that partition; overflow -> hash -> least-loaded."""
+    u, v = edges[:, 0], edges[:, 1]
+    cu, cv = v2c[u], v2c[v]
+    pu, pv = c2p[cu], c2p[cv]
+    eligible = valid & ((cu == cv) | (pu == pv))
+    target = pu
+
+    ok, sizes = _ranked_admit(target, eligible, sizes, cap, k)
+    assignment = jnp.where(ok, target, jnp.int32(-1))
+
+    # overflow chain (paper Alg. 2 line 22-23 + prose): degree hash ...
+    over = eligible & ~ok
+    hi = jnp.where(d[u] >= d[v], u, v)
+    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
+    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
+    assignment = jnp.where(ok2, t2, assignment)
+
+    # ... then least-loaded as last resort.
+    still = over & ~ok2
+    assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
+
+    bits = _apply_bits(bits, edges, assignment)
+    remaining = valid & ~eligible
+    return bits, sizes, assignment, remaining
+
+
+# ---------------------------------------------------------------------------
+# Step 3: linear-time 2-candidate scoring
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("k",),
+                   donate_argnums=(0, 1))
+def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap):
+    """Score each *remaining* edge against exactly two candidate partitions
+    (the partitions of its endpoints' clusters) — the paper's O(|E|) claim."""
+    u, v = edges[:, 0], edges[:, 1]
+    cu, cv = v2c[u], v2c[v]
+    pu, pv = c2p[cu], c2p[cv]
+    skip = (cu == cv) | (pu == pv)        # pre-partitioned in step 2
+    todo = valid & ~skip
+
+    du, dv = d[u], d[v]
+    vol_u, vol_v = vol[cu], vol[cv]
+
+    def score_for(p):
+        rep_u = bitops.get_jnp(bits, u, p)
+        rep_v = bitops.get_jnp(bits, v, p)
+        return twopsl_score(du, dv, vol_u, vol_v, rep_u, rep_v,
+                            pu == p, pv == p)
+
+    s1 = score_for(pu)
+    s2 = score_for(pv)
+    chosen = jnp.where(s2 > s1, pv, pu)   # first candidate wins ties
+
+    ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
+    assignment = jnp.where(ok, chosen, jnp.int32(-1))
+
+    over = todo & ~ok
+    hi = jnp.where(du >= dv, u, v)        # paper line 41: hash the max-degree
+    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
+    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
+    assignment = jnp.where(ok2, t2, assignment)
+
+    still = over & ~ok2
+    assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
+
+    bits = _apply_bits(bits, edges, assignment)
+    return bits, sizes, assignment
+
+
+# ---------------------------------------------------------------------------
+# Baseline chunk kernels (HDRF k-way scoring, DBH, Grid, random hash)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "lam", "use_cap", "sub",
+                                    "degree_weighted"),
+                   donate_argnums=(0, 1, 2))
+def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
+                sub: int = 64, degree_weighted: bool = True):
+    """HDRF: score EVERY partition for every edge — the O(|E|*k) cost the
+    paper eliminates.  Uses HDRF's own streamed partial degrees.
+
+    Processed as a ``lax.scan`` over ``sub``-edge micro-batches: HDRF's
+    balance term only works if partition sizes are near-fresh, so the
+    micro-batch bounds the staleness (measured alpha stays ~1.0x like the
+    sequential algorithm, vs >2x if a whole chunk reads one snapshot).
+    """
+    C = edges.shape[0]
+    assert C % sub == 0
+    edges_s = edges.reshape(C // sub, sub, 2)
+    valid_s = valid.reshape(C // sub, sub)
+    parts = jnp.arange(k, dtype=jnp.int32)
+
+    def body(carry, inp):
+        bits, sizes, dpart = carry
+        e, m = inp
+        u, v = e[:, 0], e[:, 1]
+        dpart = dpart.at[jnp.where(m, u, len(dpart))].add(1, mode="drop")
+        dpart = dpart.at[jnp.where(m, v, len(dpart))].add(1, mode="drop")
+        du, dv = dpart[u], dpart[v]
+        rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
+        rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
+        scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam,
+                            degree_weighted=degree_weighted)
+        chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        if use_cap:
+            ok, sizes = _ranked_admit(chosen, m, sizes, cap, k)
+            assignment = jnp.where(ok, chosen, jnp.int32(-1))
+            assignment, sizes = _least_loaded_rounds(
+                assignment, m & ~ok, sizes, cap, k)
+        else:
+            assignment = jnp.where(m, chosen, jnp.int32(-1))
+            sizes = sizes.at[jnp.where(m, chosen, k)].add(1, mode="drop")
+        bits = _apply_bits(bits, e, assignment)
+        return (bits, sizes, dpart), assignment
+
+    (bits, sizes, dpart), assignment = jax.lax.scan(
+        body, (bits, sizes, dpart), (edges_s, valid_s))
+    return bits, sizes, dpart, assignment.reshape(C)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "lam"),
+                   donate_argnums=(0, 1))
+def _hdrf_remaining_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap,
+                          lam):
+    """2PS-HDRF step 3: HDRF scoring over ALL k partitions for the edges the
+    pre-partitioning pass left over (true degrees known from Phase 1)."""
+    u, v = edges[:, 0], edges[:, 1]
+    cu, cv = v2c[u], v2c[v]
+    skip = (cu == cv) | (c2p[cu] == c2p[cv])
+    todo = valid & ~skip
+
+    du, dv = d[u], d[v]
+    parts = jnp.arange(k, dtype=jnp.int32)
+    rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
+    rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
+    scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam)
+    chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+    ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
+    assignment = jnp.where(ok, chosen, jnp.int32(-1))
+    over = todo & ~ok
+    hi = jnp.where(du >= dv, u, v)
+    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
+    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
+    assignment = jnp.where(ok2, t2, assignment)
+    assignment, sizes = _least_loaded_rounds(
+        assignment, over & ~ok2, sizes, cap, k)
+
+    bits = _apply_bits(bits, edges, assignment)
+    return bits, sizes, assignment
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _dbh_chunk(d, edges, valid, *, k):
+    """Degree-based hashing: hash the LOWER-degree endpoint (Xie et al.)."""
+    u, v = edges[:, 0], edges[:, 1]
+    lo = jnp.where(d[u] <= d[v], u, v)
+    p = hash_mod_jnp(lo.astype(jnp.uint32), k)
+    return jnp.where(valid, p, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rows", "cols"))
+def _grid_chunk(edges, valid, *, k, rows, cols):
+    """Grid (GraphBuilder-style 2D hash): p = (h(u) % rows) * cols + h(v) % cols."""
+    u, v = edges[:, 0], edges[:, 1]
+    p = (hash_mod_jnp(u.astype(jnp.uint32), rows) * cols
+         + hash_mod_jnp(v.astype(jnp.uint32), cols, seed=1))
+    return jnp.where(valid, p.astype(jnp.int32), -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _random_hash_chunk(edges, valid, *, k):
+    """Pure edge hashing (what P^3-style systems do instead of partitioning)."""
+    mixed = (edges[:, 0].astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+             ^ edges[:, 1].astype(jnp.uint32))
+    return jnp.where(valid, hash_mod_jnp(mixed, k), -1)
+
+
+# ---------------------------------------------------------------------------
+# chunk padding helper shared by the drivers in pipeline.py
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PaddedChunk:
+    edges: jnp.ndarray
+    valid: jnp.ndarray
+    n: int
+
+
+def pad_chunk(chunk: np.ndarray, chunk_size: int) -> PaddedChunk:
+    n = chunk.shape[0]
+    if n < chunk_size:
+        chunk = np.concatenate(
+            [chunk, np.zeros((chunk_size - n, 2), np.int32)], axis=0)
+    return PaddedChunk(edges=jnp.asarray(chunk),
+                       valid=jnp.arange(chunk_size) < n, n=n)

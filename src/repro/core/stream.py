@@ -1,0 +1,116 @@
+"""Out-of-core edge streams.
+
+2PS-L never materializes the edge set in memory: every phase is one (or a
+few) sequential passes over an edge stream.  The stream implementations here
+mirror the paper's setup:
+
+* ``InMemoryEdgeStream``   — edges already resident (the "page cache" row of
+                             Table V; also used by tests/benchmarks).
+* ``MemmapEdgeStream``     — the paper's binary edge-list file format (pairs
+                             of little-endian 32-bit vertex IDs) read through
+                             ``np.memmap`` chunk by chunk; O(chunk) memory.
+* ``ThrottledEdgeStream``  — wraps another stream and *accounts* simulated
+                             I/O time for a given sequential-read bandwidth
+                             (SSD ≈ 938 MB/s, HDD ≈ 158 MB/s in the paper's
+                             fio profile).  Used by the Table V benchmark;
+                             virtual time keeps CI fast while preserving the
+                             paper's I/O model.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import numpy as np
+
+BYTES_PER_EDGE = 8  # two little-endian uint32 vertex ids
+
+
+class EdgeStream:
+    """One re-windable stream of int32 (chunk, 2) edge arrays."""
+
+    num_edges: int
+    num_vertices: int
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        raise NotImplementedError
+
+    @property
+    def simulated_io_seconds(self) -> float:
+        return 0.0
+
+
+@dataclass
+class InMemoryEdgeStream(EdgeStream):
+    edges: np.ndarray  # (E, 2) int32
+    num_vertices: int = 0
+
+    def __post_init__(self):
+        self.edges = np.ascontiguousarray(self.edges, dtype=np.int32)
+        if self.num_vertices == 0:
+            self.num_vertices = int(self.edges.max()) + 1 if len(self.edges) else 0
+        self.num_edges = int(self.edges.shape[0])
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        for lo in range(0, self.num_edges, chunk_size):
+            yield self.edges[lo:lo + chunk_size]
+
+
+class MemmapEdgeStream(EdgeStream):
+    """Paper-format binary edge list (32-bit vertex id pairs) on disk."""
+
+    def __init__(self, path: str, num_vertices: int | None = None):
+        self.path = path
+        size = os.path.getsize(path)
+        if size % BYTES_PER_EDGE:
+            raise ValueError(f"{path}: size {size} is not a multiple of 8")
+        self.num_edges = size // BYTES_PER_EDGE
+        self._mm = np.memmap(path, dtype=np.uint32, mode="r",
+                             shape=(self.num_edges, 2))
+        if num_vertices is None:
+            num_vertices = 0
+            for lo in range(0, self.num_edges, 1 << 20):
+                blk = np.asarray(self._mm[lo:lo + (1 << 20)])
+                if blk.size:
+                    num_vertices = max(num_vertices, int(blk.max()) + 1)
+        self.num_vertices = num_vertices
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        for lo in range(0, self.num_edges, chunk_size):
+            yield np.asarray(self._mm[lo:lo + chunk_size]).astype(np.int32)
+
+    @staticmethod
+    def write(path: str, edges: np.ndarray) -> "MemmapEdgeStream":
+        arr = np.ascontiguousarray(edges, dtype=np.uint32)
+        arr.tofile(path)
+        return MemmapEdgeStream(path, num_vertices=int(edges.max()) + 1)
+
+
+@dataclass
+class ThrottledEdgeStream(EdgeStream):
+    inner: EdgeStream
+    read_bytes_per_sec: float  # e.g. 938e6 (SSD), 158e6 (HDD)
+    _io_seconds: float = field(default=0.0, init=False)
+
+    def __post_init__(self):
+        self.num_edges = self.inner.num_edges
+        self.num_vertices = self.inner.num_vertices
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        for chunk in self.inner.iter_chunks(chunk_size):
+            self._io_seconds += chunk.shape[0] * BYTES_PER_EDGE / self.read_bytes_per_sec
+            yield chunk
+
+    @property
+    def simulated_io_seconds(self) -> float:
+        return self._io_seconds
+
+
+def compute_degrees(stream: EdgeStream, chunk_size: int = 1 << 20) -> np.ndarray:
+    """The paper's upfront degree pass: one linear sweep keeping a counter per
+    vertex id (O(|V|) state, O(|E|) time)."""
+    deg = np.zeros(stream.num_vertices, dtype=np.int64)
+    for chunk in stream.iter_chunks(chunk_size):
+        deg += np.bincount(chunk.reshape(-1), minlength=stream.num_vertices)
+    return deg.astype(np.int32)

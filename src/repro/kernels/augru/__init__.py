@@ -1,0 +1,2 @@
+from .ops import augru
+from .ref import augru_ref

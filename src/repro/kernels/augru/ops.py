@@ -1,0 +1,41 @@
+"""Public AUGRU op: pads gates/hidden to lane boundaries, dispatches Pallas
+on TPU and the lax.scan oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_B, LANES, augru_pallas
+from .ref import augru_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def augru(x_gates, u, att, h0, *, impl: str = "auto"):
+    """x_gates: (B, T, 3H) precomputed input gates (layout r|z|n);
+    u: (H, 3H) recurrent weights; att: (B, T); h0: (B, H).
+    Returns hidden states (B, T, H)."""
+    if impl == "auto":
+        impl = "pallas" if jax.devices()[0].platform == "tpu" else "ref"
+    if impl == "ref":
+        return augru_ref(x_gates, u, att, h0)
+
+    B, T, threeH = x_gates.shape
+    H = threeH // 3
+    pad_b = (-B) % BLOCK_B
+    pad_h = (-H) % LANES
+    Hp = H + pad_h
+
+    # pad each gate section independently so in-kernel slices stay aligned
+    xg = x_gates.reshape(B, T, 3, H)
+    xg = jnp.pad(xg, ((0, pad_b), (0, 0), (0, 0), (0, pad_h)))
+    xg = xg.reshape(B + pad_b, T, 3 * Hp)
+    up = jnp.pad(u.reshape(H, 3, H),
+                 ((0, pad_h), (0, 0), (0, pad_h))).reshape(Hp, 3 * Hp)
+    att_p = jnp.pad(att, ((0, pad_b), (0, 0)))
+    h0_p = jnp.pad(h0, ((0, pad_b), (0, pad_h)))
+
+    out = augru_pallas(xg, up, att_p, h0_p,
+                       interpret=(impl == "pallas_interpret"))
+    return out[:B, :, :H]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the AUGRU scan (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def augru_ref(x_gates, u, att, h0):
+    """x_gates: (B, T, 3H); u: (H, 3H); att: (B, T); h0: (B, H).
+    Gate layout (r, z, n).  Returns (B, T, H) hidden states."""
+    H = h0.shape[-1]
+
+    def step(h, inp):
+        xg, a = inp                              # (B, 3H), (B,)
+        hU = h @ u
+        r = jax.nn.sigmoid(xg[:, :H] + hU[:, :H])
+        z = jax.nn.sigmoid(xg[:, H:2 * H] + hU[:, H:2 * H])
+        n = jnp.tanh(xg[:, 2 * H:] + r * hU[:, 2 * H:])
+        zg = a[:, None] * z
+        h_new = (1.0 - zg) * h + zg * n
+        return h_new, h_new
+
+    _, h_all = jax.lax.scan(step, h0.astype(jnp.float32),
+                            (jnp.swapaxes(x_gates, 0, 1).astype(jnp.float32),
+                             jnp.swapaxes(att, 0, 1).astype(jnp.float32)))
+    return jnp.swapaxes(h_all, 0, 1).astype(x_gates.dtype)

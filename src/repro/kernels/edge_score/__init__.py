@@ -1,0 +1,2 @@
+from .ops import edge_score_choose
+from .ref import edge_score_choose_ref

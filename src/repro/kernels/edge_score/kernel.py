@@ -1,0 +1,73 @@
+"""Pallas TPU kernel for 2PS-L Phase-2 Step-3 scoring.
+
+The paper's linear-time claim rests on this loop: for every remaining edge,
+score exactly TWO candidate partitions (the endpoints' cluster partitions)
+and pick the better one.  Per edge that is ~20 flops over 10 gathered scalars
+— on TPU the op is purely memory-bound, so the win comes from fusing all of
+it into one VMEM pass instead of letting XLA materialize each intermediate
+(g_u, g_v, sc_u, sc_v, two score vectors) in HBM.
+
+Layout: the edge stream chunk is reshaped to (rows, 128) so the lane
+dimension is hardware-native; one grid step processes a (BLOCK_ROWS, 128)
+tile of edges with every operand resident in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 8  # 8 * 128 = 1024 edges per grid step
+
+
+def _score(d_self, d_other, vol_self, vol_other, rep, on_p):
+    dsum = jnp.maximum(d_self + d_other, 1.0)
+    g = jnp.where(rep, 1.0 + (1.0 - d_self / dsum), 0.0)
+    vsum = jnp.maximum(vol_self + vol_other, 1.0)
+    sc = jnp.where(on_p, vol_self / vsum, 0.0)
+    return g + sc
+
+
+def _edge_score_kernel(du_ref, dv_ref, vol_u_ref, vol_v_ref,
+                       rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref,
+                       pu_ref, pv_ref, chosen_ref, best_ref):
+    du = du_ref[...].astype(jnp.float32)
+    dv = dv_ref[...].astype(jnp.float32)
+    vol_u = vol_u_ref[...].astype(jnp.float32)
+    vol_v = vol_v_ref[...].astype(jnp.float32)
+    pu = pu_ref[...]
+    pv = pv_ref[...]
+
+    # candidate 1 = pu: u's cluster is on pu by construction
+    s1 = (_score(du, dv, vol_u, vol_v, rep_u1_ref[...] != 0, True)
+          + _score(dv, du, vol_v, vol_u, rep_v1_ref[...] != 0, pv == pu))
+    # candidate 2 = pv: v's cluster is on pv by construction
+    s2 = (_score(du, dv, vol_u, vol_v, rep_u2_ref[...] != 0, pu == pv)
+          + _score(dv, du, vol_v, vol_u, rep_v2_ref[...] != 0, True))
+
+    chosen_ref[...] = jnp.where(s2 > s1, pv, pu)
+    best_ref[...] = jnp.maximum(s1, s2)
+
+
+def edge_score_pallas(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
+                      pu, pv, *, interpret: bool = False):
+    """All inputs (rows, 128); rep_* are int8/bool 0/1 flags.
+
+    Returns (chosen partition (rows,128) int32, best score (rows,128) f32).
+    """
+    rows = du.shape[0]
+    assert rows % BLOCK_ROWS == 0, (rows, BLOCK_ROWS)
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _edge_score_kernel,
+        grid=grid,
+        in_specs=[spec] * 10,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2, pu, pv)

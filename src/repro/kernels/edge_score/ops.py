@@ -1,0 +1,39 @@
+"""jit'd public wrapper: pads flat edge arrays to the (rows, 128) layout the
+kernel tiles over, runs the Pallas kernel (interpret mode off-TPU), unpads."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_ROWS, LANES, edge_score_pallas
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def edge_score_choose(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
+                      pu, pv, *, interpret: bool | None = None):
+    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    E = du.shape[0]
+    pad = (-E) % _TILE
+    Ep = E + pad
+
+    def prep(x, dtype):
+        x = jnp.pad(x.astype(dtype), (0, pad))
+        return x.reshape(Ep // LANES, LANES)
+
+    args = [prep(du, jnp.float32), prep(dv, jnp.float32),
+            prep(vol_u, jnp.float32), prep(vol_v, jnp.float32),
+            prep(rep_u1, jnp.int8), prep(rep_v1, jnp.int8),
+            prep(rep_u2, jnp.int8), prep(rep_v2, jnp.int8),
+            prep(pu, jnp.int32), prep(pv, jnp.int32)]
+    chosen, best = edge_score_pallas(*args, interpret=interpret)
+    return chosen.reshape(Ep)[:E], best.reshape(Ep)[:E]

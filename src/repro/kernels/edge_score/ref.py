@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the edge_score kernel (shares the paper's scoring
+function with the core partitioner)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.scoring import twopsl_score
+
+
+def edge_score_choose_ref(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2,
+                          rep_v2, pu, pv):
+    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32)."""
+    s1 = twopsl_score(du, dv, vol_u, vol_v, rep_u1 != 0, rep_v1 != 0,
+                      jnp.ones_like(pu, bool), pv == pu)
+    s2 = twopsl_score(du, dv, vol_u, vol_v, rep_u2 != 0, rep_v2 != 0,
+                      pu == pv, jnp.ones_like(pv, bool))
+    return jnp.where(s2 > s1, pv, pu).astype(jnp.int32), jnp.maximum(s1, s2)

@@ -1,0 +1,2 @@
+from .ops import embedding_bag
+from .ref import embedding_bag_ref

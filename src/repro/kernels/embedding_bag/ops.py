@@ -1,0 +1,32 @@
+"""Public EmbeddingBag op: gather (XLA) + fused Pallas bag pooling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_B, TILE_D, bag_pool_pallas
+from .ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "impl"))
+def embedding_bag(table, indices, weights=None, *, mode: str = "sum",
+                  impl: str = "auto"):
+    """table: (V, D); indices: (B, L); weights: (B, L) or None -> (B, D)."""
+    if impl == "auto":
+        impl = "pallas" if jax.devices()[0].platform == "tpu" else "ref"
+    if impl == "ref":
+        return embedding_bag_ref(table, indices, weights, mode=mode)
+
+    B, L = indices.shape
+    D = table.shape[1]
+    if weights is None:
+        weights = jnp.ones((B, L), table.dtype)
+    pad_b = (-B) % BLOCK_B
+    pad_d = (-D) % TILE_D
+    g = jnp.pad(table[indices], ((0, pad_b), (0, 0), (0, pad_d)))
+    w = jnp.pad(weights, ((0, pad_b), (0, 0)))
+    out = bag_pool_pallas(g, w, mode=mode,
+                          interpret=(impl == "pallas_interpret"))
+    return out[:B, :D]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for EmbeddingBag (take + weighted segment reduction)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights=None, *, mode: str = "sum"):
+    """table: (V, D); indices: (B, L); weights: (B, L) or None -> (B, D)."""
+    g = table[indices]                          # (B, L, D)
+    if weights is None:
+        weights = jnp.ones(indices.shape, table.dtype)
+    acc = jnp.einsum("bld,bl->bd", g.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        acc = acc / denom
+    return acc.astype(table.dtype)

@@ -1,0 +1,124 @@
+"""Blockwise online-softmax (Flash) attention for TPU, with native GQA.
+
+Tiling: grid = (batch*q_heads, q_blocks, kv_blocks); the kv dimension is the
+innermost (sequential) axis, with the running max / denominator / accumulator
+kept in VMEM scratch across kv steps.  Block sizes are MXU-native
+(BQ = BK = 128, head_dim padded to 128), so every matmul in the kernel is a
+128x128 systolic pass.  GQA is handled by the k/v BlockSpec index maps
+(query head h reads kv head h // group) — no materialized head repetition,
+which is exactly the HBM saving that makes GQA attractive on TPU.
+
+Causal masking compares global q/kv coordinates, supporting Sq != Skv
+(chunked prefill and decode read a longer KV than they write queries for,
+offset = Skv - Sq).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+LANES = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, q_len: int, kv_len: int,
+                  block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    offset = kv_len - q_len  # queries sit at the END of the kv timeline
+
+    # entire block above the causal diagonal -> skip all compute
+    run = (not causal) or (k_start <= q_start + block_q - 1 + offset)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)       # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)       # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)       # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < kv_len                       # kv padding
+        if causal:
+            mask &= cols <= rows + offset
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                      # (BQ, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool, scale: float,
+                           q_len: int, kv_len: int,
+                           block_q: int = DEFAULT_BQ,
+                           block_k: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q: (B, Hq, Sq_pad, D); k, v: (B, Hkv, Skv_pad, D); D padded to 128.
+    Returns (B, Hq, Sq_pad, D) in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    assert Sq % block_q == 0 and Skv % block_k == 0
+
+    grid = (B * Hq, Sq // block_q, Skv // block_k)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, D),
+                          lambda bh, qi, ki: (bh // Hq, bh % Hq, qi, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, block_k, D),
+        lambda bh, qi, ki: (bh // Hq, (bh % Hq) // group, ki, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, D),
+                          lambda bh, qi, ki: (bh // Hq, bh % Hq, qi, 0))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_len=q_len,
+        kv_len=kv_len, block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),      # acc
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),  # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

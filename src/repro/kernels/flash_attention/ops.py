@@ -1,0 +1,57 @@
+"""Public attention op: pads to hardware tiles, dispatches Pallas on TPU and
+the jnp oracle elsewhere (the CPU dry-run lowers the oracle; identical math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+from .ref import attention_ref, gqa_attention
+
+# above this many kv positions the jnp path switches to the blockwise
+# online-softmax scan so S x S scores are never materialized
+BLOCKWISE_KV_THRESHOLD = 8192
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q",
+                                              "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "auto",
+                    block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    impl: 'pallas' | 'pallas_interpret' | 'ref' | 'auto'
+    ('auto' = pallas on TPU, gqa_attention otherwise — interpret-mode Pallas
+    inside a training step would crawl on CPU hosts; gqa_attention goes
+    blockwise above BLOCKWISE_KV_THRESHOLD kv positions).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.devices()[0].platform == "tpu" else "ref"
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    if impl == "ref":
+        Skv = k.shape[2]
+        block_kv = 512 if Skv > BLOCKWISE_KV_THRESHOLD else None
+        return gqa_attention(q, k, v, causal=causal, scale=scale,
+                             block_kv=block_kv)
+
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    # shrink the q block for short query runs (decode), keeping it a power
+    # of two >= 8 so the sublane dimension stays hardware-aligned
+    pow2 = 8
+    while pow2 < Sq and pow2 < block_q:
+        pow2 *= 2
+    block_q = min(block_q, pow2)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    pad_d = (-D) % 128
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, pad_d)))
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, scale=scale, q_len=Sq, kv_len=Skv,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"))
+    return out[:, :, :Sq, :D]

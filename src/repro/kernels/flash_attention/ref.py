@@ -1,0 +1,118 @@
+"""Attention oracles + the efficient jnp path used off-TPU.
+
+``attention_ref``      — materialized-scores oracle (kernel tests).
+``gqa_attention``      — the production jnp path: reshape-based GQA (never
+                         materializes repeated KV heads), sharding
+                         constraints on the score tensor, optional blockwise
+                         (online-softmax) evaluation so 32k-token prefill
+                         never materializes S x S scores.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        offset = Skv - Sq
+        rows = jnp.arange(Sq)[:, None]
+        cols = jnp.arange(Skv)[None, :]
+        s = jnp.where(cols <= rows + offset, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def _score_block(q5, kb, scale, *, causal, offset, col0, kv_valid_len):
+    """q5: (B, Hkv, g, Sq, D); kb: (B, Hkv, Bk, D) -> scores (B,Hkv,g,Sq,Bk).
+    Sharding: batch over fsdp, then kv-heads over model when divisible, else
+    the query-sequence dim, else the kv dim (long-context decode)."""
+    # NOTE 1: no explicit sharding constraint here — GSPMD propagates the
+    # (kv-head x group) factorized head sharding from the projections, and a
+    # hand constraint on Sq was measured to CONFLICT with it, triggering
+    # "involuntary full rematerialization" (64 GiB replicated scores).
+    # NOTE 2: f32 accumulation via preferred_element_type, NOT by casting
+    # the operands — `kb.astype(f32)` on a decode cache gets hoisted out of
+    # the layer scan by XLA and materializes an f32 copy of the ENTIRE
+    # stacked KV cache (measured 5 GiB/device at 32k x batch 128).
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q5, kb,
+                   preferred_element_type=jnp.float32) * scale
+    Sq, Bk = s.shape[3], s.shape[4]
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (Sq, Bk), 1)
+    mask = jnp.ones((Sq, Bk), bool)
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (Sq, Bk), 0)
+        mask &= cols <= rows + offset
+    if kv_valid_len is not None:
+        mask &= cols < kv_valid_len
+    return jnp.where(mask, s, -1e30)
+
+
+def gqa_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  kv_valid_len=None, block_kv: int | None = None):
+    """Efficient GQA attention.  q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    block_kv: if set, evaluate with an online-softmax scan over kv blocks
+    (O(Sq * block) score memory) — forward-only workloads (prefill, decode).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    offset = Skv - Sq
+    q5 = q.reshape(B, Hkv, group, Sq, D)
+
+    if block_kv is None or block_kv >= Skv:
+        s = _score_block(q5, k, scale, causal=causal, offset=offset,
+                         col0=0, kv_valid_len=kv_valid_len)
+        p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+    # ---- blockwise online softmax over kv ----
+    nb = -(-Skv // block_kv)
+    pad = nb * block_kv - Skv
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    valid = kv_valid_len if kv_valid_len is not None else Skv
+    kb = kp.reshape(B, Hkv, nb, block_kv, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, Hkv, nb, block_kv, D).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        i, kblk, vblk = inp
+        s = _score_block(q5, kblk, scale, causal=causal, offset=offset,
+                         col0=i * block_kv, kv_valid_len=valid)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vblk,
+                                       preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, group, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nb, dtype=jnp.int32), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

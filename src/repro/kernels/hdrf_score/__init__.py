@@ -1,0 +1,2 @@
+from .ops import hdrf_choose
+from .ref import hdrf_choose_ref

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel for HDRF k-way scoring — the O(|E|*k) baseline hot loop.
+
+Kept deliberately structure-identical to edge_score: same scoring math, but
+evaluated against ALL k partitions per edge (2PS-L's complexity win is the
+contrast between these two kernels).  One grid step scores a (BLOCK_E, k_pad)
+tile: the k dimension lives in lanes, the per-edge argmax is a lane
+reduction.  Replication flags arrive as an (E, k) int8 matrix (unpacked from
+the bit matrix outside), partition sizes as a broadcast (1, k_pad) row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_E = 8
+
+
+def _hdrf_kernel(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
+                 chosen_ref, best_ref, *, lam: float, k: int):
+    du = du_ref[...].astype(jnp.float32)        # (BLOCK_E, 1)
+    dv = dv_ref[...].astype(jnp.float32)
+    dsum = jnp.maximum(du + dv, 1.0)
+    theta_u = du / dsum
+    theta_v = dv / dsum
+    g_u = jnp.where(rep_u_ref[...] != 0, 2.0 - theta_u, 0.0)
+    g_v = jnp.where(rep_v_ref[...] != 0, 2.0 - theta_v, 0.0)
+
+    sizes = sizes_ref[...].astype(jnp.float32)  # (1, k_pad)
+    maxs = jnp.max(jnp.where(_lane_mask(sizes, k), sizes, -jnp.inf))
+    mins = jnp.min(jnp.where(_lane_mask(sizes, k), sizes, jnp.inf))
+    c_bal = lam * (maxs - sizes) / (1.0 + maxs - mins)
+
+    score = g_u + g_v + c_bal
+    score = jnp.where(_lane_mask(score, k), score, -jnp.inf)
+    chosen_ref[...] = jnp.argmax(score, axis=1, keepdims=True).astype(
+        jnp.int32)
+    best_ref[...] = jnp.max(score, axis=1, keepdims=True)
+
+
+def _lane_mask(x, k):
+    return jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1) < k
+
+
+def hdrf_pallas(du, dv, rep_u, rep_v, sizes, *, lam: float, k: int,
+                interpret: bool = False):
+    """du, dv: (E, 1); rep_u/v: (E, k_pad) int8; sizes: (1, k_pad).
+    Returns (chosen (E, 1) int32, best (E, 1) f32)."""
+    E, k_pad = rep_u.shape
+    assert E % BLOCK_E == 0
+    grid = (E // BLOCK_E,)
+    col = pl.BlockSpec((BLOCK_E, 1), lambda i: (i, 0))
+    mat = pl.BlockSpec((BLOCK_E, k_pad), lambda i: (i, 0))
+    row = pl.BlockSpec((1, k_pad), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_hdrf_kernel, lam=lam, k=k),
+        grid=grid,
+        in_specs=[col, col, mat, mat, row],
+        out_specs=[col, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, 1), jnp.int32),
+            jax.ShapeDtypeStruct((E, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(du, dv, rep_u, rep_v, sizes)

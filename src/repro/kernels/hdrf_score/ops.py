@@ -1,0 +1,35 @@
+"""jit'd wrapper: pads (E,) / (E, k) inputs to hardware tiles and runs the
+HDRF scoring kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK_E, hdrf_pallas
+
+LANES = 128
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
+def hdrf_choose(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1,
+                interpret: bool | None = None):
+    """du, dv: (E,); rep_u/v: (E, k) bool/int8; sizes: (k,).
+    Returns (chosen (E,) int32, best (E,) f32)."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    E, k = rep_u.shape
+    pad_e = (-E) % BLOCK_E
+    pad_k = (-k) % LANES
+    Ep = E + pad_e
+
+    du_p = jnp.pad(du.astype(jnp.float32), (0, pad_e)).reshape(Ep, 1)
+    dv_p = jnp.pad(dv.astype(jnp.float32), (0, pad_e)).reshape(Ep, 1)
+    ru = jnp.pad(rep_u.astype(jnp.int8), ((0, pad_e), (0, pad_k)))
+    rv = jnp.pad(rep_v.astype(jnp.int8), ((0, pad_e), (0, pad_k)))
+    sz = jnp.pad(sizes.astype(jnp.float32), (0, pad_k)).reshape(1, -1)
+
+    chosen, best = hdrf_pallas(du_p, dv_p, ru, rv, sz, lam=lam, k=k,
+                               interpret=interpret)
+    return chosen.reshape(Ep)[:E], best.reshape(Ep)[:E]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for HDRF k-way scoring (shares core.scoring.hdrf_score)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.scoring import hdrf_score
+
+
+def hdrf_choose_ref(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1):
+    """du, dv: (E,); rep_u/v: (E, k) bool; sizes: (k,).
+    Returns (chosen (E,) int32, best (E,) f32)."""
+    scores = hdrf_score(du.astype(jnp.float32), dv.astype(jnp.float32),
+                        rep_u != 0, rep_v != 0, sizes, lam=lam)
+    return (jnp.argmax(scores, axis=1).astype(jnp.int32),
+            jnp.max(scores, axis=1))

@@ -1,0 +1,2 @@
+from .ops import prepare_tiles, segment_sum_tiles, spmm
+from .ref import segment_sum_ref, spmm_ref

@@ -1,0 +1,78 @@
+"""Tile-aligned segment-sum for GNN message passing on TPU (SpMM regime).
+
+The scatter-add at the heart of message passing (``Y[dst] += msg``) is the
+GNN hot spot.  XLA lowers it to serialized dynamic-update-slices; this kernel
+instead restructures it as dense MXU work, the TPU-native adaptation:
+
+1. (host, once per graph) edges are sorted by destination and split at
+   node-block boundaries so every 128-edge tile lands in exactly ONE
+   128-row output block; tiles are padded with dst_local = -1.
+2. (kernel) each tile builds a one-hot (128 nodes x 128 edges) mask with
+   ``broadcasted_iota`` and multiplies it against the (128 edges x 128 feat)
+   message tile — a single 128^3 systolic pass that performs the entire
+   scatter for the tile.
+3. Output blocks are revisited consecutively (tiles are sorted by block), so
+   the accumulator stays resident in VMEM; the first visit zero-initializes.
+
+The tile -> output-block map is a prefetched scalar array
+(``PrefetchScalarGridSpec``) consumed by the output index_map — the same
+mechanism MegaBlocks-style grouped GEMMs use for expert offsets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_E = 128   # edges per tile
+TILE_N = 128   # output rows per block
+TILE_D = 128   # feature lanes per block
+
+
+def _segment_kernel(rb_ref, dst_ref, msg_ref, o_ref):
+    i = pl.program_id(1)  # tile index (innermost: consecutive block revisits)
+
+    first_visit = (i == 0) | (rb_ref[i] != rb_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(first_visit)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dst = dst_ref[0]                                   # (TILE_E,) local ids
+    rows = jax.lax.broadcasted_iota(jnp.int32, (TILE_N, TILE_E), 0)
+    onehot = (rows == dst[None, :]).astype(jnp.float32)   # pads (-1) -> 0
+    o_ref[...] += jax.lax.dot(onehot, msg_ref[...].astype(jnp.float32),
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def segment_sum_pallas(messages, dst_local, tile_rb, n_blocks,
+                       *, interpret: bool = False):
+    """messages: (Ep, Dp) tile-aligned; dst_local: (n_tiles, TILE_E) int32
+    (-1 = pad); tile_rb: (n_tiles,) int32 output block per tile (sorted).
+    Returns (n_blocks*TILE_N, Dp)."""
+    Ep, Dp = messages.shape
+    n_tiles = Ep // TILE_E
+    assert Dp % TILE_D == 0 and dst_local.shape == (n_tiles, TILE_E)
+    nD = Dp // TILE_D
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nD, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, TILE_E), lambda j, i, rb: (i, 0)),
+            pl.BlockSpec((TILE_E, TILE_D), lambda j, i, rb: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_D),
+                               lambda j, i, rb: (rb[i], j)),
+    )
+    return pl.pallas_call(
+        _segment_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks * TILE_N, Dp),
+                                       messages.dtype),
+        interpret=interpret,
+    )(tile_rb, dst_local, messages)

@@ -1,0 +1,87 @@
+"""Public SpMM op: host-side tile preparation (once per static graph) + jit'd
+gather -> Pallas segment-sum."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import TILE_D, TILE_E, TILE_N, segment_sum_pallas
+
+
+@dataclass(frozen=True)
+class TilePrep:
+    """Static tiling metadata for one graph (edges sorted by dst, block-split,
+    padded to TILE_E multiples)."""
+    perm: np.ndarray        # (Ep,) index into the original edge list (pads=0)
+    pad_mask: np.ndarray    # (Ep,) 1.0 for real edges, 0.0 for pads
+    dst_local: np.ndarray   # (n_tiles, TILE_E) int32, -1 on pads
+    tile_rb: np.ndarray     # (n_tiles,) int32, ascending
+    n_blocks: int
+    num_nodes: int
+
+
+def prepare_tiles(dst: np.ndarray, num_nodes: int) -> TilePrep:
+    E = len(dst)
+    order = np.argsort(dst, kind="stable")
+    dst_s = dst[order]
+    n_blocks = -(-num_nodes // TILE_N)
+    blk = dst_s // TILE_N
+    counts = np.bincount(blk, minlength=n_blocks)
+    # every block gets >= 1 tile so its output rows are zero-initialized
+    padded = np.maximum(-(-counts // TILE_E), 1) * TILE_E
+    poff = np.zeros(n_blocks + 1, np.int64)
+    np.cumsum(padded, out=poff[1:])
+    Ep = int(poff[-1])
+    starts = np.zeros(n_blocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    pos = poff[blk] + (np.arange(E) - starts[blk])
+
+    perm = np.zeros(Ep, np.int64)
+    pad_mask = np.zeros(Ep, np.float32)
+    dst_local = np.full(Ep, -1, np.int32)
+    perm[pos] = order
+    pad_mask[pos] = 1.0
+    dst_local[pos] = (dst_s - blk * TILE_N).astype(np.int32)
+
+    tile_rb = np.repeat(np.arange(n_blocks, dtype=np.int32),
+                        padded // TILE_E)
+    return TilePrep(perm=perm, pad_mask=pad_mask,
+                    dst_local=dst_local.reshape(-1, TILE_E),
+                    tile_rb=tile_rb, n_blocks=int(n_blocks),
+                    num_nodes=num_nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "num_nodes",
+                                              "interpret"))
+def _segment_sum_jit(messages_p, dst_local, tile_rb, *, n_blocks, num_nodes,
+                     interpret):
+    Ep, D = messages_p.shape
+    pad_d = (-D) % TILE_D
+    mp = jnp.pad(messages_p, ((0, 0), (0, pad_d)))
+    out = segment_sum_pallas(mp, dst_local, tile_rb, n_blocks,
+                             interpret=interpret)
+    return out[:num_nodes, :D]
+
+
+def segment_sum_tiles(messages, prep: TilePrep, *,
+                      interpret: bool | None = None):
+    """messages: (E, D) in original edge order -> (num_nodes, D)."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    messages_p = messages[prep.perm] * prep.pad_mask[:, None]
+    return _segment_sum_jit(messages_p, jnp.asarray(prep.dst_local),
+                            jnp.asarray(prep.tile_rb),
+                            n_blocks=prep.n_blocks,
+                            num_nodes=prep.num_nodes, interpret=interpret)
+
+
+def spmm(x, src, weights, prep: TilePrep, *, interpret: bool | None = None):
+    """Y[dst] += w * X[src] with the tile-aligned Pallas reduction."""
+    msg = x[src]
+    if weights is not None:
+        msg = msg * weights[:, None]
+    return segment_sum_tiles(msg, prep, interpret=interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: plain segment_sum / gather-scatter SpMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages, dst, num_nodes):
+    """messages: (E, D); dst: (E,) -> (num_nodes, D)."""
+    return jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+
+
+def spmm_ref(x, src, dst, weights, num_nodes):
+    """Y = A @ X with A given as an edge list: Y[dst] += w * X[src]."""
+    msg = x[src]
+    if weights is not None:
+        msg = msg * weights[:, None]
+    return segment_sum_ref(msg, dst, num_nodes)

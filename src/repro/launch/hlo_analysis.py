@@ -1,0 +1,77 @@
+"""Post-SPMD HLO analysis: per-device collective wire-bytes extraction.
+
+Separate module (no XLA_FLAGS side effects) so tests and benchmarks can
+import it without touching jax device state.
+"""
+from __future__ import annotations
+
+import re
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+# instruction lines look like:  %name = <shapes> <op>(operands), ...
+# <shapes> may be one shape or a (possibly huge) tuple with /*index=N*/
+# comments (e.g. a 256-way all-to-all or a whole-gradient-pytree
+# all-reduce), so shapes are findall'd from the text between '=' and the op.
+_COLL_RE = re.compile(
+    r" = (.*?)\s?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _tensor_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes-on-wire per collective kind, ring estimates:
+    all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n of the
+    (full) tensor, collective-permute 1x."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.groups()
+        size = _tensor_bytes(shapes_str)
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            n = len(gl.group(1).split(",")) if gl else 1
+        if kind == "collective-permute":
+            wire = float(size)     # point-to-point: no group discount
+        elif n <= 1:
+            continue
+        elif kind == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        else:
+            wire = float(size) * (n - 1) / n
+        out[kind] += wire
+        out["count"] += 1
+    out["total_bytes"] = sum(out[k] for k in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute"))
+    return out
+
+

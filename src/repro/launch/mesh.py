@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ('data', 'model') — 256 chips (one v5e pod).
+Multi-pod:  (2, 16, 16) = ('pod', 'data', 'model') — 512 chips; the 'pod'
+axis carries only data parallelism + ZeRO sharding, so its collectives are
+the (slow) inter-pod DCN links, while 'model' stays inside the pod's ICI.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py (which forces 512 host devices)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Degenerate mesh over however many real devices exist (tests/smoke)."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

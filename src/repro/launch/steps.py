@@ -1,0 +1,143 @@
+"""Step functions per (family x kind): the units the dry-run lowers and the
+trainers/servers run.  Every step is a pure function of (state/params, batch)
+so jit in_shardings fully determine the distribution."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.optim.schedules import linear_warmup_cosine
+from repro.training import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_loss_fn(cfg):
+    return functools.partial(T.lm_loss, cfg)
+
+
+def make_lm_train_step(cfg, *, lr=3e-4, microbatches: int = 1):
+    lr_fn = linear_warmup_cosine(lr, 100, 10_000)
+    return make_train_step(lm_loss_fn(cfg), lr_fn, microbatches=microbatches)
+
+
+def make_lm_prefill_step(cfg):
+    def prefill(params, batch):
+        logits, _ = T.forward(cfg, params, batch["tokens"])
+        # serving returns only the last-position logits (next-token dist)
+        return logits[:, -1, :]
+    return prefill
+
+
+def make_lm_decode_step(cfg):
+    def decode(params, batch):
+        logits, cache = T.decode_step(cfg, params, batch["cache"],
+                                      batch["tokens"], batch["pos"])
+        return logits, cache
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_loss_fn(spec_family_cfg, kind: str, n_graphs: int = 1):
+    """Builds loss(params, batch) for any of the four GNN archs."""
+    cfg = spec_family_cfg
+    is_nequip = cfg.__class__.__name__ == "NequIPConfig"
+
+    def loss(params, batch):
+        if is_nequip:
+            out = G.nequip_apply(cfg, params, batch, n_graphs=n_graphs)
+            if kind == "molecule":
+                return jnp.mean(jnp.square(
+                    out["energy"] - batch["energy_target"]))
+            # non-molecular cells: per-node energy regression on the labels
+            tgt = batch["labels"].astype(jnp.float32)
+            m = batch["node_mask"]
+            if "loss_mask" in batch:
+                m = m * batch["loss_mask"]
+            err = jnp.square(out["atom_energy"] - tgt) * m
+            return err.sum() / jnp.maximum(m.sum(), 1.0)
+
+        _, _, apply = G.GNN_MODELS[_gnn_kind(cfg)]
+        out = apply(cfg, params, batch, n_graphs=n_graphs)
+        logits = out["node_logits"].astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+        m = batch["node_mask"]
+        if "loss_mask" in batch:
+            m = m * batch["loss_mask"]
+        return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+    return loss
+
+
+def _gnn_kind(cfg):
+    return {"GINConfig": "gin", "GatedGCNConfig": "gatedgcn",
+            "EGNNConfig": "egnn", "NequIPConfig": "nequip"}[
+                cfg.__class__.__name__]
+
+
+def gnn_init(cfg, key):
+    _, init, _ = G.GNN_MODELS[_gnn_kind(cfg)]
+    return init(cfg, key)
+
+
+def make_gnn_train_step(cfg, kind: str, *, n_graphs: int = 1, lr=1e-3):
+    lr_fn = linear_warmup_cosine(lr, 20, 2_000)
+    return make_train_step(gnn_loss_fn(cfg, kind, n_graphs), lr_fn,
+                           weight_decay=0.0)
+
+
+# ---------------------------------------------------------------------------
+# recsys (DIEN)
+# ---------------------------------------------------------------------------
+
+def make_recsys_train_step(cfg, *, lr=1e-3):
+    lr_fn = linear_warmup_cosine(lr, 50, 5_000)
+    return make_train_step(functools.partial(R.dien_loss, cfg), lr_fn,
+                           weight_decay=0.0)
+
+
+def make_recsys_serve_step(cfg):
+    def serve(params, batch):
+        logit, _ = R.dien_forward(cfg, params, batch)
+        return jax.nn.sigmoid(logit)
+    return serve
+
+
+def make_recsys_retrieval_step(cfg, top_k: int = 100):
+    def retrieve(params, batch):
+        scores = R.dien_retrieval_score(cfg, params, batch)
+        return jax.lax.top_k(scores, top_k)
+    return retrieve
+
+
+# ---------------------------------------------------------------------------
+# init helpers shared by train.py / dryrun.py
+# ---------------------------------------------------------------------------
+
+def init_state_abstract(family, cfg, kind: str):
+    """Abstract (ShapeDtypeStruct) train/serve state for lowering."""
+    if family == "lm":
+        params = jax.eval_shape(functools.partial(T.init_params, cfg),
+                                jax.random.key(0))
+    elif family == "gnn":
+        params = jax.eval_shape(functools.partial(gnn_init, cfg),
+                                jax.random.key(0))
+    else:
+        params = jax.eval_shape(functools.partial(R.dien_init, cfg),
+                                jax.random.key(0))
+    if kind in ("train", "full", "sampled", "molecule", "train_batch"):
+        opt = jax.eval_shape(adamw_init, params)
+        return {"params": params, "opt": opt}
+    return params

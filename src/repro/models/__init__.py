@@ -1,0 +1,6 @@
+"""Model substrate: LM transformers (dense + MoE), GNNs, recsys (DIEN).
+
+Plain functional style: every model is ``init(cfg, key) -> params`` pytree +
+``apply/forward(cfg, params, ...)``; no module framework, so pjit sharding
+rules can address parameters by pytree path directly.
+"""

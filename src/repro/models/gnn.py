@@ -1,0 +1,405 @@
+"""GNN substrate: GIN, GatedGCN (SpMM regime), EGNN, NequIP-lite (equivariant
+regime).
+
+Message passing is built on ``jax.ops.segment_sum`` over an (E, 2) edge-index
+array — JAX has no CSR/CSC sparse, so the scatter idiom IS the system (see
+kernels/spmm for the Pallas-tiled variant of the same reduction).
+
+Graph batches are dicts of fixed-shape arrays with masks, so every model
+works unmodified for (a) one big graph, (b) a padded batch of small molecule
+graphs (graph_ids routes the readout), and (c) sampled subgraphs:
+
+  nodes (N, F) · edges (E, 2) int32 · edge_attr (E, Fe)|None · coords (N,3)|None
+  node_mask (N,) · edge_mask (E,) · graph_ids (N,) int32
+
+Equivariance note (NequIP): the reference model uses e3nn irreps with
+spherical CG tensor products.  On TPU we implement the l<=2 feature algebra
+in the CARTESIAN basis (scalars / vectors / traceless symmetric matrices),
+where every coupling path is an einsum — MXU-friendly and exactly
+E(3)-equivariant (property-tested under random rotations).  Same
+radial-MLP-weighted-tensor-product structure, different basis. See DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+segsum = functools.partial(jax.ops.segment_sum)
+
+
+def _seg_sum(data, ids, n):
+    return jax.ops.segment_sum(data, ids, num_segments=n)
+
+
+def _masked_batchnorm(x, mask, eps=1e-5):
+    """Training-mode batch norm statistics over valid nodes (no running
+    stats; the benchmark GNNs recompute per step)."""
+    m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+    denom = jnp.maximum(m.sum(), 1.0)
+    mu = (x * m).sum(axis=0, keepdims=True) / denom
+    var = (jnp.square(x - mu) * m).sum(axis=0, keepdims=True) / denom
+    return (x - mu) * jax.lax.rsqrt(var + eps) * m
+
+
+def _mlp2_init(key, d_in, d_h, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"l1": L.dense_init(k1, d_in, d_h, bias=True, dtype=dtype),
+            "l2": L.dense_init(k2, d_h, d_out, bias=True, dtype=dtype)}
+
+
+def _mlp2(p, x, act="silu"):
+    return L.dense(p["l2"], L.activation(act, L.dense(p["l1"], x)))
+
+
+# ===========================================================================
+# GIN  (Xu et al., arXiv:1810.00826) — 5L, d=64, sum agg, learnable eps
+# ===========================================================================
+
+@dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 0            # input feature dim (required)
+    n_classes: int = 2
+    dtype: str = "float32"
+
+
+def gin_init(cfg: GINConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "mlp": _mlp2_init(ks[i], cfg.d_hidden, cfg.d_hidden,
+                              cfg.d_hidden, dt),
+            "eps": jnp.zeros((), dt),
+        })
+    return {
+        "encoder": L.dense_init(ks[-2], cfg.d_in, cfg.d_hidden, bias=True,
+                                dtype=dt),
+        "layers": layers,
+        "head": L.dense_init(ks[-1], cfg.d_hidden, cfg.n_classes, bias=True,
+                             dtype=dt),
+    }
+
+
+def gin_apply(cfg: GINConfig, params, batch, *, n_graphs: int = 1):
+    N = batch["nodes"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None]
+    h = L.dense(params["encoder"], batch["nodes"])
+    for lp in params["layers"]:
+        agg = _seg_sum(h[src] * emask, dst, N)
+        h = _mlp2(lp["mlp"], (1.0 + lp["eps"]) * h + agg, act="relu")
+        h = _masked_batchnorm(h, batch["node_mask"])
+        h = jax.nn.relu(h)
+    node_logits = L.dense(params["head"], h)
+    graph_repr = _seg_sum(h * batch["node_mask"][:, None],
+                          batch["graph_ids"], n_graphs)
+    graph_logits = L.dense(params["head"], graph_repr)
+    return {"node_logits": node_logits, "graph_logits": graph_logits,
+            "node_repr": h}
+
+
+# ===========================================================================
+# GatedGCN  (Bresson & Laurent; benchmarking-gnns arXiv:2003.00982)
+# 16L, d=70, gated edge aggregation, residual, BN
+# ===========================================================================
+
+@dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 0
+    d_edge_in: int = 0       # 0 -> edges start from ones
+    n_classes: int = 2
+    dtype: str = "float32"
+
+
+def gatedgcn_init(cfg: GatedGCNConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, cfg.n_layers * 5 + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        b = i * 5
+        layers.append({
+            "U": L.dense_init(ks[b], d, d, bias=True, dtype=dt),
+            "V": L.dense_init(ks[b + 1], d, d, bias=True, dtype=dt),
+            "A": L.dense_init(ks[b + 2], d, d, bias=True, dtype=dt),
+            "B": L.dense_init(ks[b + 3], d, d, bias=True, dtype=dt),
+            "C": L.dense_init(ks[b + 4], d, d, bias=True, dtype=dt),
+        })
+    return {
+        "encoder": L.dense_init(ks[-3], cfg.d_in, d, bias=True, dtype=dt),
+        "edge_encoder": L.dense_init(ks[-2], max(cfg.d_edge_in, 1), d,
+                                     bias=True, dtype=dt),
+        "layers": layers,
+        "head": L.dense_init(ks[-1], d, cfg.n_classes, bias=True, dtype=dt),
+    }
+
+
+def gatedgcn_apply(cfg: GatedGCNConfig, params, batch, *, n_graphs: int = 1):
+    N = batch["nodes"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None]
+    h = L.dense(params["encoder"], batch["nodes"])
+    ea = batch.get("edge_attr")
+    if ea is None:
+        ea = jnp.ones((batch["edges"].shape[0], 1), h.dtype)
+    e = L.dense(params["edge_encoder"], ea)
+    for lp in params["layers"]:
+        e_new = (L.dense(lp["A"], h)[src] + L.dense(lp["B"], h)[dst]
+                 + L.dense(lp["C"], e))
+        eta = jax.nn.sigmoid(e_new) * emask
+        num = _seg_sum(eta * L.dense(lp["V"], h)[src], dst, N)
+        den = _seg_sum(eta, dst, N) + 1e-6
+        h_new = L.dense(lp["U"], h) + num / den
+        h = h + jax.nn.relu(_masked_batchnorm(h_new, batch["node_mask"]))
+        e = e + jax.nn.relu(_masked_batchnorm(e_new, batch["edge_mask"]))
+    node_logits = L.dense(params["head"], h)
+    graph_repr = _seg_sum(h * batch["node_mask"][:, None],
+                          batch["graph_ids"], n_graphs)
+    return {"node_logits": node_logits,
+            "graph_logits": L.dense(params["head"], graph_repr),
+            "node_repr": h}
+
+
+# ===========================================================================
+# EGNN  (Satorras et al., arXiv:2102.09844) — E(n)-equivariant, 4L, d=64
+# ===========================================================================
+
+@dataclass(frozen=True)
+class EGNNConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 0
+    n_classes: int = 2
+    dtype: str = "float32"
+
+
+def egnn_init(cfg: EGNNConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers * 3 + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        b = i * 3
+        layers.append({
+            "phi_e": _mlp2_init(ks[b], 2 * d + 1, d, d, dt),
+            "phi_x": _mlp2_init(ks[b + 1], d, d, 1, dt),
+            "phi_h": _mlp2_init(ks[b + 2], 2 * d, d, d, dt),
+        })
+    return {
+        "encoder": L.dense_init(ks[-2], cfg.d_in, d, bias=True, dtype=dt),
+        "layers": layers,
+        "head": L.dense_init(ks[-1], d, cfg.n_classes, bias=True, dtype=dt),
+    }
+
+
+def egnn_apply(cfg: EGNNConfig, params, batch, *, n_graphs: int = 1):
+    N = batch["nodes"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"][:, None]
+    h = L.dense(params["encoder"], batch["nodes"])
+    x = batch["coords"].astype(h.dtype)
+    deg = _seg_sum(batch["edge_mask"], dst, N)[:, None] + 1.0
+    for lp in params["layers"]:
+        diff = x[dst] - x[src]                       # (E, 3)
+        dist2 = jnp.sum(jnp.square(diff), axis=-1, keepdims=True)
+        m = _mlp2(lp["phi_e"], jnp.concatenate(
+            [h[dst], h[src], dist2], axis=-1)) * emask
+        # coordinate update (equivariant)
+        xw = jnp.tanh(_mlp2(lp["phi_x"], m))         # bounded for stability
+        x = x + _seg_sum(diff * xw * emask, dst, N) / deg
+        # feature update
+        agg = _seg_sum(m, dst, N)
+        h = h + _mlp2(lp["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    node_logits = L.dense(params["head"], h)
+    graph_repr = _seg_sum(h * batch["node_mask"][:, None],
+                          batch["graph_ids"], n_graphs)
+    return {"node_logits": node_logits,
+            "graph_logits": L.dense(params["head"], graph_repr),
+            "node_repr": h, "coords": x}
+
+
+# ===========================================================================
+# NequIP-lite  (Batzner et al., arXiv:2101.03164) — E(3)-equivariant
+# interatomic potential; l<=2 feature algebra in the Cartesian basis.
+# ===========================================================================
+
+@dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    mul: int = 32            # channels per irrep order
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 4
+    dtype: str = "float32"
+
+
+def _bessel_rbf(r, n_rbf, cutoff):
+    """Bessel radial basis with smooth polynomial cutoff envelope."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n * jnp.pi * r[..., None] / cutoff) / r[..., None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5   # p=3 poly cutoff
+    return basis * env[..., None]
+
+
+def nequip_init(cfg: NequIPConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    C = cfg.mul
+    ks = jax.random.split(key, cfg.n_layers * 8 + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        b = i * 8
+        # radial MLP emits one weight per (path, channel)
+        n_paths = 10
+        layers.append({
+            "radial": _mlp2_init(ks[b], cfg.n_rbf, 32, n_paths * C, dt),
+            "mix0": L.dense_init(ks[b + 1], 2 * C, C, bias=True, dtype=dt),
+            "mix1": L.dense_init(ks[b + 2], 2 * C, C, dtype=dt),
+            "mix2": L.dense_init(ks[b + 3], 2 * C, C, dtype=dt),
+            "gate1": L.dense_init(ks[b + 4], C, C, bias=True, dtype=dt),
+            "gate2": L.dense_init(ks[b + 5], C, C, bias=True, dtype=dt),
+        })
+    return {
+        "embed": {"table": jax.random.normal(ks[-2], (cfg.n_species, C), dt)
+                  * 0.5},
+        "layers": layers,
+        "energy_head": _mlp2_init(ks[-1], C, C, 1, dt),
+    }
+
+
+def _tp_messages(h0, h1, h2, Y1, Y2, src, w):
+    """All l<=2 Cartesian coupling paths for one edge set.
+
+    h0 (N,C) scalars; h1 (N,C,3) vectors; h2 (N,C,3,3) traceless symmetric.
+    Y1 (E,3), Y2 (E,3,3) edge spherical tensors; w (E,10,C) radial weights.
+    Returns per-edge messages (m0 (E,C), m1 (E,C,3), m2 (E,C,3,3)).
+    """
+    s0, s1, s2 = h0[src], h1[src], h2[src]
+    wi = lambda i: w[:, i]                                   # (E, C)
+    # --- scalar outputs ---
+    m0 = (wi(0) * s0                                          # 0x0->0
+          + wi(1) * jnp.einsum("eci,ei->ec", s1, Y1)          # 1x1->0
+          + wi(2) * jnp.einsum("ecij,eij->ec", s2, Y2))       # 2x2->0
+    # --- vector outputs ---
+    m1 = (wi(3)[..., None] * s0[..., None] * Y1[:, None, :]   # 0x1->1
+          + wi(4)[..., None] * s1                             # 1x0->1
+          + wi(5)[..., None] * jnp.cross(
+              s1, jnp.broadcast_to(Y1[:, None, :], s1.shape))  # 1x1->1
+          + wi(6)[..., None] * jnp.einsum("ecij,ej->eci", s2, Y1))  # 2x1->1
+    # --- rank-2 outputs ---
+    outer = 0.5 * (jnp.einsum("eci,ej->ecij", s1, Y1)
+                   + jnp.einsum("eci,ej->ecji", s1, Y1))
+    tr = jnp.einsum("ecii->ec", outer)
+    eye = jnp.eye(3, dtype=h0.dtype)
+    outer_tl = outer - tr[..., None, None] / 3.0 * eye        # 1x1->2
+    m2 = (wi(7)[..., None, None] * s0[..., None, None] * Y2[:, None]  # 0x2->2
+          + wi(8)[..., None, None] * s2                       # 2x0->2
+          + wi(9)[..., None, None] * outer_tl)
+    return m0, m1, m2
+
+
+def nequip_apply(cfg: NequIPConfig, params, batch, *, n_graphs: int = 1):
+    """batch['nodes']: (N,) int32 species ids (or one-hot (N, n_species));
+    coords (N, 3).  Returns per-atom and per-graph energy."""
+    N = batch["coords"].shape[0]
+    src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
+    emask = batch["edge_mask"]
+    C = cfg.mul
+    species = batch["nodes"]
+    if species.ndim == 2:                       # one-hot -> embed matmul
+        h0 = species @ params["embed"]["table"]
+    else:
+        h0 = params["embed"]["table"][species]
+    dt = h0.dtype
+    h1 = jnp.zeros((N, C, 3), dt)
+    h2 = jnp.zeros((N, C, 3, 3), dt)
+
+    x = batch["coords"].astype(jnp.float32)
+    diff = x[dst] - x[src]
+    r = jnp.sqrt(jnp.sum(jnp.square(diff), axis=-1) + 1e-12)
+    rhat = diff / r[:, None]
+    Y1 = rhat.astype(dt)
+    eye = jnp.eye(3, dtype=dt)
+    Y2 = (jnp.einsum("ei,ej->eij", rhat, rhat)
+          - eye / 3.0).astype(dt)
+    rbf = _bessel_rbf(r, cfg.n_rbf, cfg.cutoff).astype(dt)
+
+    for lp in params["layers"]:
+        w = _mlp2(lp["radial"], rbf).reshape(-1, 10, C)
+        w = w * emask[:, None, None]
+        m0, m1, m2 = _tp_messages(h0, h1, h2, Y1, Y2, src, w)
+        a0 = _seg_sum(m0, dst, N)
+        a1 = _seg_sum(m1, dst, N)
+        a2 = _seg_sum(m2, dst, N)
+        # self-interaction: mix (old, aggregated) channels per order
+        h0 = L.dense(lp["mix0"], jnp.concatenate([h0, a0], axis=-1))
+        h1 = _mix_vec(lp["mix1"], h1, a1)
+        h2 = _mix_mat(lp["mix2"], h2, a2)
+        # gated nonlinearity: scalars gate the higher orders
+        h0 = L.activation("silu", h0)
+        g1 = jax.nn.sigmoid(L.dense(lp["gate1"], h0))
+        g2 = jax.nn.sigmoid(L.dense(lp["gate2"], h0))
+        h1 = h1 * g1[..., None]
+        h2 = h2 * g2[..., None, None]
+
+    atom_energy = _mlp2(params["energy_head"], h0)[:, 0]
+    atom_energy = atom_energy * batch["node_mask"]
+    energy = _seg_sum(atom_energy, batch["graph_ids"], n_graphs)
+    return {"atom_energy": atom_energy, "energy": energy,
+            "h0": h0, "h1": h1}
+
+
+def _mix_vec(p, h1, a1):
+    cat = jnp.concatenate([h1, a1], axis=1)       # (N, 2C, 3)
+    return jnp.einsum("nci,cd->ndi", cat, p["w"])
+
+
+def _mix_mat(p, h2, a2):
+    cat = jnp.concatenate([h2, a2], axis=1)       # (N, 2C, 3, 3)
+    return jnp.einsum("ncij,cd->ndij", cat, p["w"])
+
+
+# ===========================================================================
+# registry + loss helpers
+# ===========================================================================
+
+GNN_MODELS = {
+    "gin": (GINConfig, gin_init, gin_apply),
+    "gatedgcn": (GatedGCNConfig, gatedgcn_init, gatedgcn_apply),
+    "egnn": (EGNNConfig, egnn_init, egnn_apply),
+    "nequip": (NequIPConfig, nequip_init, nequip_apply),
+}
+
+
+def gnn_node_loss(apply_fn, params, batch, n_classes):
+    out = apply_fn(params, batch)
+    logits = out["node_logits"].astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch["node_mask"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def nequip_energy_loss(apply_fn, params, batch, n_graphs):
+    out = apply_fn(params, batch, n_graphs=n_graphs)
+    return jnp.mean(jnp.square(out["energy"] - batch["energy_target"]))

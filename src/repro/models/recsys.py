@@ -1,0 +1,140 @@
+"""DIEN (Deep Interest Evolution Network, arXiv:1809.03672) for CTR ranking.
+
+Structure (per the assigned config: embed_dim=18, seq_len=100, gru_dim=108,
+MLP 200-80, interaction=AUGRU):
+
+  behavior seq -> item embedding (the huge sparse table; the lookup is the
+  hot path) -> GRU interest extraction (+ auxiliary next-behavior loss)
+  -> target-conditioned attention -> AUGRU interest evolution
+  -> MLP(interest, target) -> CTR logit.
+
+Both recurrences run through kernels/augru (a plain GRU is an AUGRU with
+attention == 1, so one fused kernel serves both stages).
+
+``retrieval score`` path: scoring 10^6 candidates cannot re-run the AUGRU per
+candidate (the recurrence is target-dependent); production retrieval towers
+replace interest *evolution* with DIN-style attention pooling over the
+precomputed GRU states — one batched matmul over all candidates.  We
+implement exactly that and document the approximation (DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.augru import augru
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class DIENConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple = (200, 80)
+    aux_weight: float = 0.1
+    dtype: str = "float32"
+
+
+def dien_init(cfg: DIENConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    e, g = cfg.embed_dim, cfg.gru_dim
+    ks = jax.random.split(key, 12)
+    mlp_in = g + e
+    mlp = []
+    d_prev = mlp_in
+    for i, d in enumerate(cfg.mlp_dims):
+        mlp.append(L.dense_init(ks[6 + i], d_prev, d, bias=True, dtype=dt))
+        d_prev = d
+    return {
+        "item_table": {"table": jax.random.normal(
+            ks[0], (cfg.n_items, e), dt) * 0.05},
+        "gru_wx": L.dense_init(ks[1], e, 3 * g, bias=True, dtype=dt),
+        "gru_u": jax.random.normal(ks[2], (g, 3 * g), dt) * float(1.0 / np.sqrt(g)),
+        "att_w": jax.random.normal(ks[3], (g, e), dt) * float(1.0 / np.sqrt(g)),
+        "augru_wx": L.dense_init(ks[4], g, 3 * g, bias=True, dtype=dt),
+        "augru_u": jax.random.normal(ks[5], (g, 3 * g), dt) * float(1.0 / np.sqrt(g)),
+        "mlp": mlp,
+        "head": L.dense_init(ks[10], d_prev, 1, bias=True, dtype=dt),
+        "aux_w": jax.random.normal(ks[11], (g, e), dt) * float(1.0 / np.sqrt(g)),
+    }
+
+
+def _mlp_head(params, x):
+    for p in params["mlp"]:
+        x = jax.nn.relu(L.dense(p, x))
+    return L.dense(params["head"], x)[..., 0]
+
+
+def _interest_states(cfg, params, hist_emb, hist_mask):
+    """GRU interest extraction: (B, T, e) -> (B, T, g)."""
+    B, T, _ = hist_emb.shape
+    xg = L.dense(params["gru_wx"], hist_emb)             # (B, T, 3g)
+    ones = jnp.ones((B, T), hist_emb.dtype)
+    h0 = jnp.zeros((B, cfg.gru_dim), hist_emb.dtype)
+    states = augru(xg, params["gru_u"], ones, h0)        # GRU == AUGRU@att=1
+    return states * hist_mask[..., None]
+
+
+def dien_forward(cfg: DIENConfig, params, batch):
+    """batch: hist (B, T) int32, hist_mask (B, T), target (B,) int32.
+    Returns (logit (B,), aux_loss scalar)."""
+    hist_emb = params["item_table"]["table"][batch["hist"]]  # (B, T, e)
+    tgt_emb = params["item_table"]["table"][batch["target"]]  # (B, e)
+    mask = batch["hist_mask"].astype(hist_emb.dtype)
+
+    states = _interest_states(cfg, params, hist_emb, mask)
+
+    # auxiliary loss: state_t should predict behavior_{t+1} over a shifted
+    # negative (DIEN's aux net, bilinear form)
+    pred = jnp.einsum("btg,ge->bte", states[:, :-1], params["aux_w"])
+    pos = jnp.einsum("bte,bte->bt", pred, hist_emb[:, 1:])
+    neg_emb = jnp.roll(hist_emb[:, 1:], 1, axis=0)           # cheap negatives
+    neg = jnp.einsum("bte,bte->bt", pred, neg_emb)
+    m = mask[:, 1:] * mask[:, :-1]
+    aux = -(jnp.log(jax.nn.sigmoid(pos) + 1e-9)
+            + jnp.log(1.0 - jax.nn.sigmoid(neg) + 1e-9))
+    aux_loss = cfg.aux_weight * (aux * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+    # target-conditioned attention -> AUGRU interest evolution
+    att_logits = jnp.einsum("btg,ge,be->bt", states, params["att_w"],
+                            tgt_emb)
+    att_logits = jnp.where(mask > 0, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits, axis=-1) * mask
+    xg2 = L.dense(params["augru_wx"], states)
+    h0 = jnp.zeros((states.shape[0], cfg.gru_dim), states.dtype)
+    evolved = augru(xg2, params["augru_u"], att, h0)
+    final = evolved[:, -1]                                   # (B, g)
+
+    logit = _mlp_head(params, jnp.concatenate([final, tgt_emb], axis=-1))
+    return logit, aux_loss
+
+
+def dien_loss(cfg: DIENConfig, params, batch):
+    logit, aux = dien_forward(cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    p = jax.nn.sigmoid(logit.astype(jnp.float32))
+    bce = -(y * jnp.log(p + 1e-9) + (1 - y) * jnp.log(1 - p + 1e-9)).mean()
+    return bce + aux
+
+
+def dien_retrieval_score(cfg: DIENConfig, params, batch):
+    """Score ONE user's history against M candidates with DIN-style
+    attention pooling over precomputed GRU states (no per-candidate
+    recurrence).  batch: hist (1, T), hist_mask (1, T), candidates (M,).
+    Returns scores (M,)."""
+    hist_emb = params["item_table"]["table"][batch["hist"]]
+    mask = batch["hist_mask"].astype(hist_emb.dtype)
+    states = _interest_states(cfg, params, hist_emb, mask)[0]   # (T, g)
+    cand_emb = params["item_table"]["table"][batch["candidates"]]  # (M, e)
+
+    att = jnp.einsum("tg,ge,me->mt", states, params["att_w"], cand_emb)
+    att = jnp.where(mask[0][None, :] > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)                          # (M, T)
+    interest = att @ states                                     # (M, g)
+    return _mlp_head(params, jnp.concatenate([interest, cand_emb], axis=-1))

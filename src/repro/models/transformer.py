@@ -1,0 +1,448 @@
+"""Decoder-only LM transformer: GQA + RoPE attention, dense or MoE FFN.
+
+Covers the five assigned LM architectures through one config surface:
+qwen1.5-110b (QKV bias, SwiGLU), starcoder2-3b (LayerNorm+GELU, all biases),
+minitron-8b (squared-ReLU, no bias), qwen2-moe-a2.7b (60 routed top-4 +
+4 shared experts), olmoe-1b-7b (64 routed top-8, QK-norm).
+
+Implementation notes
+- layers are stacked on a leading L axis and executed with ``lax.scan`` so
+  HLO size (and compile time) is depth-independent; remat policy is applied
+  around the scanned block.
+- MoE dispatch is sort-based with static shapes (argsort by expert, rank-in-
+  expert via cummax, capacity drop) — the TPU/SPMD-native formulation; no
+  ragged tensors.
+- Attention runs through kernels/flash_attention ops (Pallas on TPU, jnp
+  oracle elsewhere); decode keeps a (L, B, Hkv, S_max, Dh) cache and masks by
+  position.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.kernels.flash_attention import flash_attention
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0          # shared experts, each d_ff_expert wide
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # >1 = dispatch groups (EP-style): tokens are routed within G
+    # independent groups aligned with the data shards, so the argsort /
+    # gather / scatter of dispatch never crosses devices.  Capacity is
+    # enforced per group (same total).  The global-sort GSPMD dispatch
+    # (G=1) was measured to replicate a (N*k, d_model) gather per device.
+    dispatch_groups: int = 1
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "silu"            # silu | gelu | relu2
+    gated_mlp: bool = True
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    dtype: str = "float32"       # parameter/compute dtype
+    remat: str = "none"          # none | full | dots
+    # cost-extraction mode: python-loop the layer stack instead of lax.scan
+    # (XLA cost analysis counts a while body ONCE; see launch/dryrun.py)
+    unroll_layers: bool = False
+
+    @property
+    def head_dim(self):
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def num_params(self) -> int:
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * dh * d
+        if self.moe:
+            m = self.moe
+            per_expert = 3 * d * m.d_ff_expert if self.gated_mlp \
+                else 2 * d * m.d_ff_expert
+            ffn = (m.num_experts + m.num_shared) * per_expert \
+                + d * m.num_experts
+        else:
+            ffn = (3 if self.gated_mlp else 2) * d * self.d_ff
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn) + embed
+
+    def num_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k + shared experts)."""
+        if not self.moe:
+            return self.num_params()
+        d = self.d_model
+        m = self.moe
+        per_expert = (3 if self.gated_mlp else 2) * d * m.d_ff_expert
+        dh = self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * dh * d
+        ffn_active = (m.top_k + m.num_shared) * per_expert \
+            + d * m.num_experts
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn_active) + embed
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: TransformerConfig, key):
+    dt = cfg.param_dtype
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        "ln1": L.norm_init(cfg.norm, d, dt),
+        "ln2": L.norm_init(cfg.norm, d, dt),
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * dh, bias=cfg.qkv_bias,
+                           dtype=dt),
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias,
+                           dtype=dt),
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * dh, bias=cfg.qkv_bias,
+                           dtype=dt),
+        "wo": L.dense_init(ks[3], cfg.n_heads * dh, d, bias=cfg.mlp_bias,
+                           dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh, dt)
+        p["k_norm"] = L.rmsnorm_init(dh, dt)
+    if cfg.moe:
+        m = cfg.moe
+        e, f = m.num_experts, m.d_ff_expert
+        scale = float(1.0 / np.sqrt(d))
+        p["router"] = {"w": jax.random.normal(ks[4], (d, e), dt) * scale}
+        p["experts"] = {
+            "up": jax.random.normal(ks[5], (e, d, f), dt) * scale,
+            "down": jax.random.normal(ks[6], (e, f, d), dt) * float(1.0 / np.sqrt(f)),
+        }
+        if cfg.gated_mlp:
+            p["experts"]["gate"] = jax.random.normal(
+                ks[7], (e, d, f), dt) * scale
+        if m.num_shared:
+            p["shared"] = L.mlp_init(ks[8], d, m.num_shared * f,
+                                     gated=cfg.gated_mlp, bias=cfg.mlp_bias,
+                                     dtype=dt)
+    else:
+        p["mlp"] = L.mlp_init(ks[4], d, cfg.d_ff, gated=cfg.gated_mlp,
+                              bias=cfg.mlp_bias, dtype=dt)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key):
+    dt = cfg.param_dtype
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    params = {
+        "embed": L.embedding_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab,
+                                         dtype=dt)
+    return params
+
+
+def init_params_abstract(cfg: TransformerConfig):
+    """Shape/dtype-only params (for the dry-run: no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# MoE layer (sort-based dispatch, static shapes)
+# ---------------------------------------------------------------------------
+
+def _moe_apply(cfg: TransformerConfig, p, x):
+    """x: (N, d) -> (N, d), plus the load-balancing aux loss."""
+    m = cfg.moe
+    N, d = x.shape
+    if m.dispatch_groups > 1 and N % m.dispatch_groups == 0:
+        G = m.dispatch_groups
+        xg = constrain(x.reshape(G, N // G, d), (0, "fsdp"))
+        out, aux = jax.vmap(
+            lambda xx: _moe_dispatch(cfg, p, xx, grouped=True))(xg)
+        out = constrain(out, (0, "fsdp")).reshape(N, d)
+        result, aux = out, aux.mean()
+        if m.num_shared:
+            result = result + L.mlp(p["shared"], x, act=cfg.act)
+        return result, aux
+    out, aux = _moe_dispatch(cfg, p, x)
+    if m.num_shared:
+        out = out + L.mlp(p["shared"], x, act=cfg.act)
+    return out, aux
+
+
+def _moe_dispatch(cfg: TransformerConfig, p, x, *, grouped: bool = False):
+    """Sort-based dispatch for one token group: x (N, d) -> (N, d), aux."""
+    m = cfg.moe
+    N, d = x.shape
+    E, k = m.num_experts, m.top_k
+    logits = (x @ p["router"]["w"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (N, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss: fraction of tokens * router prob mass per expert
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (N * k))
+    aux = m.aux_loss_weight * E * jnp.sum(me * ce)
+
+    # ---- dispatch: sort token->expert pairs, rank within expert ----
+    flat_e = top_e.reshape(-1)                                   # (N*k,)
+    flat_w = top_p.reshape(-1).astype(x.dtype)
+    flat_t = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_s, t_s, w_s = flat_e[order], flat_t[order], flat_w[order]
+    idx = jnp.arange(N * k, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), e_s[1:] != e_s[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank = idx - start
+    C = int(np.ceil(N * k / E * m.capacity_factor))
+    keep = rank < C
+    slot = jnp.where(keep, e_s * C + rank, E * C)                # drop OOB
+
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(x[t_s], mode="drop")
+    buf = buf.reshape(E, C, d)
+    if not grouped:
+        # expert-parallel buffer: experts over 'model' when divisible
+        # (olmoe), else capacity rows over the fsdp axes (qwen2-moe's 60
+        # experts).  Grouped dispatch constrains the group axis outside
+        # instead (with_sharding_constraint under vmap is unreliable).
+        buf = constrain(buf, (0, "model"), (1, "fsdp"))
+
+    up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["gate"])
+        h = L.activation(cfg.act, gate) * up
+    else:
+        h = L.activation(cfg.act, up)
+    y = jnp.einsum("ecf,efd->ecd", h, p["experts"]["down"])
+    y = y.reshape(E * C, d)
+
+    out = jnp.zeros((N, d), x.dtype).at[jnp.where(keep, t_s, N)].add(
+        y[jnp.clip(slot, 0, E * C - 1)] * w_s[:, None], mode="drop")
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _attention(cfg: TransformerConfig, p, x, positions, *, kv=None,
+               kv_valid_len=None):
+    """x: (B, S, d).  kv: optional (k_cache, v_cache) each (B, Hkv, Sc, Dh)
+    already containing this step's keys/values."""
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = L.dense(p["wk"], x).reshape(B, S, Hkv, Dh)
+    v = L.dense(p["wv"], x).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    q = L.apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                     cfg.rope_theta)                    # (B, H, S, Dh)
+    k = L.apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                     cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+
+    if kv is None:
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        k_all, v_all = kv
+        o = _masked_attention(q, k_all, v_all, kv_valid_len)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    return L.dense(p["wo"], o), (k, v)
+
+
+def _masked_attention(q, k, v, kv_valid_len):
+    """Decode attention over a cache with ``kv_valid_len`` live entries
+    (reshape-GQA, blockwise over long caches — no repeated-KV tensor)."""
+    from repro.kernels.flash_attention.ref import gqa_attention
+    from repro.kernels.flash_attention.ops import BLOCKWISE_KV_THRESHOLD
+    Sk = k.shape[2]
+    block_kv = 2048 if Sk > BLOCKWISE_KV_THRESHOLD else None
+    return gqa_attention(q, k, v, causal=False, kv_valid_len=kv_valid_len,
+                         block_kv=block_kv)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _block(cfg: TransformerConfig, p, h, positions):
+    a, _ = _attention(cfg, p, L.norm_apply(cfg.norm, p["ln1"], h), positions)
+    h = h + a
+    x = L.norm_apply(cfg.norm, p["ln2"], h)
+    if cfg.moe:
+        B, S, d = x.shape
+        y, aux = _moe_apply(cfg, p, x.reshape(B * S, d))
+        y = y.reshape(B, S, d)
+    else:
+        y, aux = L.mlp(p["mlp"], x, act=cfg.act), 0.0
+    return h + y, aux
+
+
+def forward(cfg: TransformerConfig, params, tokens):
+    """tokens: (B, S) -> logits (B, S, vocab), aux loss scalar."""
+    B, S = tokens.shape
+    h = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    block = functools.partial(_block, cfg)
+    if cfg.remat == "full":
+        block = jax.checkpoint(block)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = block(layer_p, h, positions)
+        # the per-layer residual saved for backward is sharded over BOTH
+        # mesh axes (sequence-parallel style): 80 full-width activations per
+        # device would not fit HBM (measured: 86 GiB -> 5.4 GiB)
+        h = constrain(h, (0, "fsdp"), (2, "model"))
+        return (h, aux + a), None
+
+    h = constrain(h, (0, "fsdp"))
+    if cfg.unroll_layers:
+        aux = jnp.float32(0.0)
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[l], params["layers"])
+            (h, aux), _ = body((h, aux), lp)
+    else:
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)),
+                                   params["layers"])
+    h = L.norm_apply(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = L.dense(params["lm_head"], h)
+    # vocab-sharded logits: replicated (B, S, V) f32 is the largest tensor in
+    # the whole step — keep it split over the model axis through the loss
+    return constrain(logits, (0, "fsdp"), (2, "model")), aux
+
+
+def lm_loss(cfg: TransformerConfig, params, batch):
+    """batch: {tokens (B, S), targets (B, S)} -> scalar loss.  The loss is
+    computed on the (B, S, V) layout directly — a reshape to (B*S, V) makes
+    a resharded copy of the largest tensor in the program."""
+    logits, aux = forward(cfg, params, batch["tokens"])
+    ce = L.cross_entropy_loss(logits, batch["targets"])
+    return ce + aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) path
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_abstract(cfg: TransformerConfig, batch: int, max_len: int,
+                   dtype=None):
+    dt = dtype or cfg.param_dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt)}
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens, pos):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (current length).
+    Returns (logits (B, vocab), updated cache)."""
+    B = tokens.shape[0]
+    h = params["embed"]["table"][tokens]            # (B, 1, d)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        layer_p, k_c, v_c = xs
+        x = L.norm_apply(cfg.norm, layer_p["ln1"], h)
+        # project this step's kv and insert at pos
+        a, (k_new, v_new) = _attention_with_cache(
+            cfg, layer_p, x, positions, k_c, v_c, pos)
+        h = h + a
+        x2 = L.norm_apply(cfg.norm, layer_p["ln2"], h)
+        if cfg.moe:
+            y, _ = _moe_apply(cfg, layer_p, x2.reshape(B, -1))
+            y = y.reshape(B, 1, -1)
+        else:
+            y = L.mlp(layer_p["mlp"], x2, act=cfg.act)
+        return h + y, (k_new, v_new)
+
+    if cfg.unroll_layers:
+        ks, vs = [], []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[l], params["layers"])
+            h, (k_l, v_l) = body(h, (lp, cache["k"][l], cache["v"][l]))
+            ks.append(k_l)
+            vs.append(v_l)
+        k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (k_all, v_all) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"]))
+    h = L.norm_apply(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h[:, 0] @ params["embed"]["table"].T
+    else:
+        logits = L.dense(params["lm_head"], h[:, 0])
+    return logits, {"k": k_all, "v": v_all}
+
+
+def _attention_with_cache(cfg, p, x, positions, k_cache, v_cache, pos):
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense(p["wq"], x).reshape(B, S, H, Dh)
+    k = L.dense(p["wk"], x).reshape(B, S, Hkv, Dh)
+    v = L.dense(p["wv"], x).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    q = L.apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                     cfg.rope_theta)
+    k = L.apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                     cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, 0, pos, 0))
+    o = _masked_attention(q, k_cache, v_cache, pos + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    return L.dense(p["wo"], o), (k_cache, v_cache)

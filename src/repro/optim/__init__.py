@@ -1,0 +1,4 @@
+from .adamw import adamw_init, adamw_update, clip_by_global_norm
+from .schedules import constant_lr, linear_warmup_cosine
+from .grad_compress import (compress_int8, decompress_int8,
+                            error_feedback_update)

@@ -1,0 +1,55 @@
+"""Functional AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer moments mirror the parameter pytree, so sharding rules written for
+params apply verbatim to optimizer state (ZeRO-1: the dist layer additionally
+shards the moments over the data axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, max_grad_norm=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        return (p - (lr * delta).astype(p.dtype), m_new, v_new)
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda x: x[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm}

@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int,
+                         total_steps: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps)
+                     / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f

@@ -1,0 +1,2 @@
+from .fault_tolerance import (FailureInjector, StepWatchdog, TrainLoopRunner)
+from .elastic import reshard_tree

@@ -1,0 +1,28 @@
+"""Elastic re-scaling: move a training state onto a different mesh.
+
+Checkpoints are topology-independent (full arrays + pytree manifest), so
+scaling from k to k' devices is: restore -> build new mesh + specs ->
+device_put with the new shardings.  The divisibility-aware rules in
+dist/sharding re-derive a valid layout for the new axis sizes automatically.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def reshard_tree(tree, mesh, specs):
+    """Place (host or device) arrays onto ``mesh`` with ``specs``."""
+    def place(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, specs)
+
+
+def elastic_restore(ckpt_dir, target_tree, mesh, specs):
+    """Restore the latest checkpoint directly onto a (possibly different)
+    mesh."""
+    from repro.checkpoint import restore_checkpoint
+    restored, step = restore_checkpoint(ckpt_dir, target_tree)
+    if restored is None:
+        return None, None
+    return reshard_tree(restored, mesh, specs), step

@@ -1,0 +1,65 @@
+"""Train-step builder: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (lax.scan — the accumulation loop is also where
+compute/communication overlap happens: XLA overlaps the DP grad reduction of
+microbatch i with the compute of microbatch i+1)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update
+
+
+class TrainState(dict):
+    """{'params': pytree, 'opt': adamw state}.  A dict subclass so
+    checkpointing/sharding treat it as a plain pytree."""
+
+    @staticmethod
+    def create(params, opt_state):
+        return {"params": params, "opt": opt_state}
+
+
+def make_train_step(loss_fn: Callable, lr_fn: Callable, *,
+                    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+                    microbatches: int = 1):
+    """loss_fn(params, batch) -> scalar.  Returns step(state, batch) ->
+    (state, metrics).  With microbatches > 1, the leading batch dim of every
+    array in ``batch`` is split and gradients are accumulated in f32."""
+
+    def step(state, batch):
+        params = state["params"]
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def reshape(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(reshape, batch)
+
+            def acc_body(carry, mbatch):
+                loss_acc, g_acc = carry
+                loss_i, g_i = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_i)
+                return (loss_acc + loss_i, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        # schedule indexed by the step being TAKEN (warmup(0) would be lr=0)
+        lr = lr_fn(state["opt"]["step"] + 1)
+        new_params, new_opt, om = adamw_update(
+            grads, state["opt"], params, lr=lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,27 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
+single real CPU device.  Only launch/dryrun.py forces 512 placeholder devices.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_rmat():
+    from repro.data import rmat_graph
+    return rmat_graph(10, edge_factor=8, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_planted():
+    from repro.data import planted_partition_graph
+    return planted_partition_graph(16, 32, 400, 800, seed=3)
+
+
+def random_graph(rng: np.random.Generator, max_v: int = 64,
+                 max_e: int = 256) -> np.ndarray:
+    n_v = int(rng.integers(2, max_v))
+    n_e = int(rng.integers(1, max_e))
+    e = rng.integers(0, n_v, size=(n_e, 2)).astype(np.int32)
+    return e[e[:, 0] != e[:, 1]]

@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs — one test per assigned arch."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.launch import steps as S
+from repro.optim import adamw_init
+
+rng = np.random.default_rng(0)
+
+LM_ARCHS = [a for a, s in ARCHS.items() if s.family == "lm"]
+GNN_ARCHS = [a for a, s in ARCHS.items() if s.family == "gnn"]
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "qwen1.5-110b", "starcoder2-3b", "minitron-8b", "qwen2-moe-a2.7b",
+        "olmoe-1b-7b", "egnn", "nequip", "gin-tu", "gatedgcn", "dien"}
+
+
+def test_full_configs_match_published_numbers():
+    c = get_arch("qwen1.5-110b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (80, 8192, 64, 8, 49152, 152064, True)
+    # ~111B params (the "110B" in the name)
+    assert 100e9 < c.num_params() < 120e9
+    c = get_arch("starcoder2-3b").make_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (30, 3072, 24, 2, 12288, 49152)
+    assert 2.5e9 < c.num_params() < 3.5e9
+    c = get_arch("minitron-8b").make_config()
+    assert (c.n_layers, c.d_model, c.vocab) == (32, 4096, 256000)
+    c = get_arch("qwen2-moe-a2.7b").make_config()
+    assert (c.moe.num_experts, c.moe.top_k, c.moe.num_shared,
+            c.moe.d_ff_expert) == (60, 4, 4, 1408)
+    assert c.num_active_params() < 0.35 * c.num_params()
+    c = get_arch("olmoe-1b-7b").make_config()
+    assert (c.moe.num_experts, c.moe.top_k) == (64, 8)
+    c = get_arch("gatedgcn").make_config()
+    assert (c.n_layers, c.d_hidden) == (16, 70)
+    c = get_arch("nequip").make_config()
+    assert (c.n_layers, c.mul, c.l_max, c.n_rbf, c.cutoff) == (5, 32, 2, 8,
+                                                               5.0)
+    c = get_arch("dien").make_config()
+    assert (c.embed_dim, c.seq_len, c.gru_dim, c.mlp_dims) == (18, 100, 108,
+                                                               (200, 80))
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_train_step(arch_id):
+    from repro.models import transformer as T
+    cfg = get_arch(arch_id).make_smoke_config()
+    params = T.init_params(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(S.make_lm_train_step(cfg))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    state, metrics = step({"params": params, "opt": opt}, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert metrics["loss"] > 0
+    # params actually moved (warmup lr is tiny at step 1 -> exact compare)
+    assert not bool(jnp.array_equal(state["params"]["layers"]["wq"]["w"],
+                                    params["layers"]["wq"]["w"]))
+    assert metrics["grad_norm"] > 0
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_smoke_decode(arch_id):
+    from repro.models import transformer as T
+    cfg = get_arch(arch_id).make_smoke_config()
+    params = T.init_params(cfg, jax.random.key(0))
+    cache = T.init_cache(cfg, 2, 8)
+    logits, cache = jax.jit(
+        lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos)
+    )(params, cache, jnp.zeros((2, 1), jnp.int32), jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch_id):
+    cfg = get_arch(arch_id).make_smoke_config()
+    N, E = 40, 160
+    batch = {
+        "nodes": jnp.asarray(rng.standard_normal((N, cfg.d_in)), jnp.float32)
+        if hasattr(cfg, "d_in") else
+        jnp.asarray(rng.integers(0, cfg.n_species, N), jnp.int32),
+        "edges": jnp.asarray(rng.integers(0, N, (E, 2)), jnp.int32),
+        "coords": jnp.asarray(rng.standard_normal((N, 3)), jnp.float32),
+        "node_mask": jnp.ones(N), "edge_mask": jnp.ones(E),
+        "graph_ids": jnp.zeros(N, jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 2, N), jnp.int32),
+        "energy_target": jnp.zeros((1,), jnp.float32),
+    }
+    params = S.gnn_init(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(S.make_gnn_train_step(cfg, "full"))
+    state, metrics = step({"params": params, "opt": opt}, batch)
+    assert jnp.isfinite(metrics["loss"])
+
+
+def test_recsys_smoke_train_and_serve():
+    from repro.models import recsys as R
+    cfg = get_arch("dien").make_smoke_config()
+    params = R.dien_init(cfg, jax.random.key(0))
+    opt = adamw_init(params)
+    B, T = 8, cfg.seq_len
+    batch = {
+        "hist": jnp.asarray(rng.integers(0, cfg.n_items, (B, T)), jnp.int32),
+        "hist_mask": jnp.ones((B, T), jnp.float32),
+        "target": jnp.asarray(rng.integers(0, cfg.n_items, B), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, B), jnp.int32),
+    }
+    step = jax.jit(S.make_recsys_train_step(cfg))
+    state, metrics = step({"params": params, "opt": opt}, batch)
+    assert jnp.isfinite(metrics["loss"])
+    serve = jax.jit(S.make_recsys_serve_step(cfg))
+    scores = serve(params, {k: batch[k] for k in
+                            ("hist", "hist_mask", "target")})
+    assert scores.shape == (B,) and jnp.isfinite(scores).all()
+    retr = jax.jit(S.make_recsys_retrieval_step(cfg, top_k=10))
+    vals, idx = retr(params, {
+        "hist": batch["hist"][:1], "hist_mask": batch["hist_mask"][:1],
+        "candidates": jnp.arange(200, dtype=jnp.int32)})
+    assert vals.shape == (10,) and jnp.isfinite(vals).all()
+
+
+def test_input_specs_cover_all_40_cells():
+    n = 0
+    for arch_id, spec in ARCHS.items():
+        for shape_name in spec.shapes:
+            specs = spec.input_specs(shape_name)
+            assert specs, (arch_id, shape_name)
+            n += 1
+    assert n == 40

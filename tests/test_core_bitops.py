@@ -1,0 +1,51 @@
+"""Packed replication bit-matrix: numpy and jax implementations must agree,
+including duplicate updates and masking."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(0, 2**32 - 1),
+       st.integers(10, 200))
+@settings(max_examples=40, deadline=None)
+def test_set_get_np_vs_jnp(V, k, seed, n_updates):
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, V, n_updates).astype(np.int32)
+    p = rng.integers(0, k, n_updates).astype(np.int32)
+
+    bm_np = bitops.alloc_np(V, k)
+    bitops.set_np(bm_np, v.astype(np.int64), p)
+
+    bm_j = bitops.alloc_jnp(V, k)
+    bm_j = bitops.set_jnp(bm_j, jnp.asarray(v), jnp.asarray(p))
+
+    np.testing.assert_array_equal(bm_np, np.asarray(bm_j))
+    got_np = bitops.get_np(bm_np, v.astype(np.int64), p)
+    got_j = np.asarray(bitops.get_jnp(bm_j, jnp.asarray(v), jnp.asarray(p)))
+    assert got_np.all() and got_j.all()
+    np.testing.assert_array_equal(bitops.popcount_np(bm_np),
+                                  np.asarray(bitops.popcount_jnp(bm_j)))
+
+
+@given(st.integers(1, 30), st.integers(1, 64), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_set_jnp_mask_drops_updates(V, k, seed):
+    rng = np.random.default_rng(seed)
+    n = 50
+    v = jnp.asarray(rng.integers(0, V, n).astype(np.int32))
+    p = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.5)
+
+    bm = bitops.set_jnp(bitops.alloc_jnp(V, k), v, p, mask=mask)
+    ref = bitops.alloc_np(V, k)
+    m = np.asarray(mask)
+    bitops.set_np(ref, np.asarray(v)[m].astype(np.int64), np.asarray(p)[m])
+    np.testing.assert_array_equal(ref, np.asarray(bm))
+
+
+def test_popcount_values():
+    bm = bitops.alloc_np(2, 64)
+    bitops.set_np(bm, np.array([0, 0, 0, 1]), np.array([0, 31, 63, 5]))
+    np.testing.assert_array_equal(bitops.popcount_np(bm), [3, 1])

@@ -1,0 +1,85 @@
+"""Phase 1 streaming clustering: faithfulness + invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (InMemoryEdgeStream, cluster_sequential,
+                        compute_degrees, default_max_vol,
+                        streaming_clustering)
+from conftest import random_graph
+
+
+def _deg(edges, V):
+    return np.bincount(edges.reshape(-1), minlength=V).astype(np.int32)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_chunk1_matches_sequential(seed):
+    """chunk_size=1, sub=1 must reproduce the paper's sequential Algorithm 1
+    bit-exactly (same migrations, same volumes)."""
+    rng = np.random.default_rng(seed)
+    edges = random_graph(rng)
+    if len(edges) == 0:
+        return
+    V = int(edges.max()) + 1
+    deg = _deg(edges, V)
+    max_vol = default_max_vol(len(edges), 4)
+    seq = cluster_sequential(edges, deg, max_vol)
+    stream = InMemoryEdgeStream(edges, num_vertices=V)
+    chk = streaming_clustering(stream, deg, k=4, max_vol=max_vol,
+                               chunk_size=1, sub=1)
+    np.testing.assert_array_equal(seq.v2c, chk.v2c)
+    np.testing.assert_array_equal(seq.vol, chk.vol)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([32, 128]),
+       st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_volume_conservation_and_validity(seed, chunk, passes):
+    rng = np.random.default_rng(seed)
+    edges = random_graph(rng, max_v=100, max_e=500)
+    if len(edges) == 0:
+        return
+    V = int(edges.max()) + 1
+    stream = InMemoryEdgeStream(edges, num_vertices=V)
+    deg = compute_degrees(stream)
+    res = streaming_clustering(stream, deg, k=4, passes=passes,
+                               chunk_size=chunk)
+    # volumes are conserved (migration moves volume, never creates it)
+    assert res.vol.sum() == deg.sum()
+    assert (res.vol >= 0).all()
+    # every vertex belongs to a valid cluster
+    assert res.v2c.min() >= 0 and res.v2c.max() < V
+    # cluster volume equals the sum of member degrees (bookkeeping closes)
+    recomputed = np.bincount(res.v2c, weights=deg.astype(np.float64),
+                             minlength=V)
+    np.testing.assert_array_equal(recomputed.astype(np.int64),
+                                  res.vol.astype(np.int64))
+
+
+def test_sequential_volume_cap_invariant():
+    rng = np.random.default_rng(0)
+    edges = random_graph(rng, max_v=200, max_e=2000)
+    V = int(edges.max()) + 1
+    deg = _deg(edges, V)
+    max_vol = default_max_vol(len(edges), 8)
+    res = cluster_sequential(edges, deg, max_vol)
+    # a cluster only ever grows while <= max_vol, by at most one vertex degree
+    assert res.vol.max() <= max_vol + deg.max()
+
+
+def test_clustering_groups_planted_communities(small_planted):
+    """On a planted-partition graph, clustering should place most vertices
+    with the majority of their community (weak but real signal)."""
+    edges = small_planted
+    stream = InMemoryEdgeStream(edges)
+    res = streaming_clustering(stream, k=8, chunk_size=4096)
+    V = stream.num_vertices
+    true = np.arange(V) // 32
+    # fraction of intra-community edges whose endpoints share a cluster
+    same_comm = true[edges[:, 0]] == true[edges[:, 1]]
+    same_clus = res.v2c[edges[:, 0]] == res.v2c[edges[:, 1]]
+    frac = same_clus[same_comm].mean()
+    rand = same_clus.mean()
+    assert frac > 0.3          # clusters capture community edges
+    assert res.num_clusters < V  # non-trivial merging happened

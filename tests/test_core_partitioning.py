@@ -1,0 +1,137 @@
+"""Phase 2 + full pipeline: the paper's hard invariants, on every partitioner.
+
+Invariants (paper §II-A / §III-B):
+  I1  every edge is assigned to exactly one partition
+  I2  2PS-L/2PS-HDRF never exceed the hard cap ceil(alpha*|E|/k)
+  I3  replication factor computed incrementally == recomputed from scratch
+  I4  LPT mapping is a valid 4/3 approximation (vs brute force, small cases)
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core import (InMemoryEdgeStream, capacity, map_clusters_lpt,
+                        map_clusters_lpt_jax, quality_from_assignment,
+                        run_2ps_hdrf, run_2psl, run_dbh, run_grid, run_hdrf,
+                        run_random)
+from conftest import random_graph
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([2, 4, 7, 16]))
+@settings(max_examples=10, deadline=None)
+def test_2psl_invariants(seed, k):
+    rng = np.random.default_rng(seed)
+    edges = random_graph(rng, max_v=80, max_e=400)
+    if len(edges) < k:
+        return
+    stream = InMemoryEdgeStream(edges)
+    res = run_2psl(stream, k, chunk_size=64)
+    # I1
+    assert (res.assignment >= 0).all() and (res.assignment < k).all()
+    # I2
+    cap = capacity(len(edges), k, res.alpha)
+    sizes = np.bincount(res.assignment, minlength=k)
+    assert sizes.max() <= cap, (sizes, cap)
+    # I3
+    q = quality_from_assignment(edges, res.assignment, stream.num_vertices, k)
+    assert abs(q.replication_factor - res.quality.replication_factor) < 1e-9
+    np.testing.assert_array_equal(q.part_sizes, res.quality.part_sizes)
+
+
+@pytest.mark.parametrize("runner", [run_2ps_hdrf, run_hdrf, run_dbh,
+                                    run_grid, run_random])
+def test_all_partitioners_complete_assignment(runner, small_rmat):
+    k = 8
+    stream = InMemoryEdgeStream(small_rmat)
+    kw = {"chunk_size": 1024} if runner in (run_2ps_hdrf, run_hdrf) else {}
+    res = runner(stream, k, **kw)
+    assert (res.assignment >= 0).all() and (res.assignment < k).all()
+    q = quality_from_assignment(small_rmat, res.assignment,
+                                stream.num_vertices, k)
+    assert abs(q.replication_factor - res.quality.replication_factor) < 1e-9
+
+
+def test_2ps_hdrf_respects_cap(small_rmat):
+    k = 16
+    stream = InMemoryEdgeStream(small_rmat)
+    res = run_2ps_hdrf(stream, k, chunk_size=1024)
+    cap = capacity(stream.num_edges, k, res.alpha)
+    assert res.quality.max_partition <= cap
+
+
+def test_chunked_matches_sequential_oracle_quality(small_planted):
+    """Bulk-synchronous phase 2 must stay within a few percent of the
+    edge-at-a-time oracle (same clustering input)."""
+    from repro.core import compute_degrees, streaming_clustering
+    from repro.core.oracle import partition_sequential
+    edges = small_planted
+    stream = InMemoryEdgeStream(edges)
+    k = 8
+    clus = streaming_clustering(stream, k=k, chunk_size=4096)
+    c2p, _ = map_clusters_lpt(clus.vol, k)
+    asg_seq, _, _ = partition_sequential(edges, clus, c2p, k)
+    q_seq = quality_from_assignment(edges, asg_seq, stream.num_vertices, k)
+    res = run_2psl(stream, k, chunk_size=4096)
+    assert res.quality.replication_factor <= q_seq.replication_factor * 1.15
+
+
+def test_dbh_deterministic(small_rmat):
+    stream = InMemoryEdgeStream(small_rmat)
+    a = run_dbh(stream, 8).assignment
+    b = run_dbh(stream, 8).assignment
+    np.testing.assert_array_equal(a, b)
+
+
+def test_partition_quality_ordering(small_planted):
+    """Paper claim C2 at miniature scale: on community-structured graphs,
+    2PS-L beats stateless hashing by a wide margin."""
+    stream = InMemoryEdgeStream(small_planted)
+    k = 16
+    rf_2psl = run_2psl(stream, k, chunk_size=4096).quality.replication_factor
+    rf_rand = run_random(stream, k).quality.replication_factor
+    rf_dbh = run_dbh(stream, k).quality.replication_factor
+    assert rf_2psl < rf_dbh
+    assert rf_2psl < rf_rand
+
+
+# ---------------------------------------------------------------------------
+# Step 1: LPT mapping
+# ---------------------------------------------------------------------------
+
+def _brute_force_makespan(vols, k):
+    best = float("inf")
+    n = len(vols)
+    for mask in range(k ** n):
+        loads = [0] * k
+        m = mask
+        for i in range(n):
+            loads[m % k] += vols[i]
+            m //= k
+        best = min(best, max(loads))
+    return best
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=7),
+       st.sampled_from([2, 3]))
+@settings(max_examples=25, deadline=None)
+def test_lpt_within_4_3_of_optimum(vols, k):
+    vol = np.zeros(len(vols) + 2, np.int64)
+    vol[:len(vols)] = vols
+    c2p, part_vol = map_clusters_lpt(vol, k)
+    opt = _brute_force_makespan(vols, k)
+    assert part_vol.max() <= np.ceil(opt * 4 / 3)
+    # mapping covers every cluster with a valid partition
+    assert c2p.min() >= 0 and c2p.max() < k
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=40),
+       st.sampled_from([2, 5, 8]))
+@settings(max_examples=25, deadline=None)
+def test_lpt_jax_matches_host(vols, k):
+    vol = np.asarray(vols, np.int64)
+    c2p_h, loads_h = map_clusters_lpt(vol, k)
+    c2p_j, loads_j = map_clusters_lpt_jax(jnp.asarray(vol), k)
+    active = vol > 0
+    np.testing.assert_array_equal(c2p_h[active], np.asarray(c2p_j)[active])
+    np.testing.assert_array_equal(loads_h, np.asarray(loads_j))

@@ -1,0 +1,46 @@
+"""Collective-bytes parser: all HLO shape formats the sweep encounters."""
+from repro.launch.hlo_analysis import parse_collectives
+
+
+def test_scalar_and_simple_shapes():
+    out = parse_collectives(
+        "%ar = f32[] all-reduce(%x), replica_groups=[2,4]<=[8]\n"
+        "%ag = bf16[16,4096]{1,0} all-gather(%h), replica_groups=[16,16]<=[256]\n")
+    assert abs(out["all-reduce"] - 2 * 4 * 3 / 4) < 1e-6
+    assert abs(out["all-gather"] - 16 * 4096 * 2 * 15 / 16) < 1e-6
+
+
+def test_tuple_shapes_with_index_comments():
+    out = parse_collectives(
+        "%ar2 = (f32[64]{0}, f32[64,64]{1,0}, /*index=2*/f32[]) "
+        "all-reduce(%a, %b, %c), replica_groups={{0,1,2,3}}\n")
+    expect = (64 + 64 * 64 + 1) * 4 * 2 * 3 / 4
+    assert abs(out["all-reduce"] - expect) < 1e-6
+
+
+def test_get_tuple_element_not_counted():
+    out = parse_collectives(
+        "%gte = f32[1,1448,64]{2,1,0} get-tuple-element(%all-to-all), "
+        "index=0\n")
+    assert out["count"] == 0
+
+
+def test_all_to_all_ring_factor():
+    out = parse_collectives(
+        "%a2a = (f32[1,8,4]{2,1,0}, f32[1,8,4]{2,1,0}) all-to-all(%p, %q), "
+        "replica_groups=[1,256]<=[256]\n")
+    assert abs(out["all-to-all"] - 2 * 8 * 4 * 4 * 255 / 256) < 1e-6
+
+
+def test_collective_permute_no_group_discount():
+    out = parse_collectives(
+        "%cp = f32[8,128]{1,0} collective-permute(%y), "
+        "source_target_pairs={{0,1}}\n")
+    assert abs(out["collective-permute"] - 8 * 128 * 4) < 1e-6
+
+
+def test_start_done_pairs_counted_once():
+    out = parse_collectives(
+        "%ars = f32[256]{0} all-reduce-start(%x), replica_groups=[1,8]<=[8]\n"
+        "%ard = f32[256]{0} all-reduce-done(%ars)\n")
+    assert out["count"] == 1

@@ -1,0 +1,75 @@
+"""Launcher-level integration: train CLI with failure injection + resume,
+serve CLI, the 2PS-L partition CLI (the paper's tool) end-to-end."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": os.environ.get("HOME", "/root")})
+
+
+def test_train_cli_with_injected_failure(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "gin-tu", "--steps", "12",
+              "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-interval", "5",
+              "--inject-failure-at", "7",
+              "--metrics-out", str(tmp_path / "m.json")])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "restarts=1" in r.stdout
+    metrics = json.load(open(tmp_path / "m.json"))
+    losses = [m["loss"] for m in metrics]
+    assert len(losses) >= 12 and all(np.isfinite(losses))
+
+
+def test_train_cli_resumes_from_checkpoint(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    r1 = _run(["repro.launch.train", "--arch", "dien", "--steps", "6",
+               "--ckpt-dir", ckpt, "--ckpt-interval", "3"])
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    r2 = _run(["repro.launch.train", "--arch", "dien", "--steps", "10",
+               "--ckpt-dir", ckpt, "--ckpt-interval", "3"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resuming from checkpoint step 6" in r2.stdout
+
+
+def test_serve_cli_lm():
+    r = _run(["repro.launch.serve", "--arch", "starcoder2-3b",
+              "--requests", "2", "--max-new", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "generated" in r.stdout
+
+
+def test_partition_cli_roundtrip(tmp_path):
+    from repro.data import rmat_graph
+    edges = rmat_graph(10, edge_factor=8, seed=5)
+    path = str(tmp_path / "g.bin")
+    np.ascontiguousarray(edges, dtype=np.uint32).tofile(path)
+    out = str(tmp_path / "assign.bin")
+    r = _run(["repro.launch.partition", "--input", path, "--k", "8",
+              "--algorithm", "2psl", "--out", out, "--json"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    rep = json.loads(r.stdout)
+    assert rep["algorithm"] == "2PS-L"
+    assert rep["alpha_measured"] <= 1.0501 * 1.05
+    asg = np.memmap(out, dtype=np.int32, mode="r")
+    assert len(asg) == len(edges)
+    assert asg.min() >= 0 and asg.max() < 8
+
+
+def test_partition_cli_throttled(tmp_path):
+    from repro.data import rmat_graph
+    edges = rmat_graph(9, edge_factor=8, seed=6)
+    path = str(tmp_path / "g.bin")
+    np.ascontiguousarray(edges, dtype=np.uint32).tofile(path)
+    r = _run(["repro.launch.partition", "--input", path, "--k", "4",
+              "--algorithm", "dbh", "--throttle-mbps", "100", "--json"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    rep = json.loads(r.stdout)
+    assert rep["simulated_io_s"] > 0
