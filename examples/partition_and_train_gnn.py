@@ -17,6 +17,7 @@ import numpy as np
 from repro.core import InMemoryEdgeStream, run_2psl, run_random
 from repro.core.integration import build_device_shards, comm_volume_per_layer
 from repro.data.gnn_batches import full_graph_batch
+from repro.dist.partitioned_gnn import plan_capacities
 from repro.launch import steps as S
 from repro.models.gnn import GINConfig
 from repro.optim import adamw_init
@@ -32,17 +33,26 @@ def main():
     print(f"graph: |V|={stream.num_vertices:,} |E|={stream.num_edges:,}")
 
     # ---- partition with 2PS-L and with hashing ----
-    comm = {}
+    comm, caps = {}, {}
     for name, runner in [("2psl", run_2psl), ("random", run_random)]:
         kw = {"chunk_size": 1 << 14} if name == "2psl" else {}
         res = runner(stream, k, **kw)
         sh = build_device_shards(edges, np.asarray(res.assignment),
                                  stream.num_vertices, k)
         comm[name] = comm_volume_per_layer(sh, d_hidden=64)
+        # the halo-exchange capacity envelope the SPMD runtime (repro.dist)
+        # would allocate for this placement: b_cap bounds the per-pair
+        # all_to_all payload each GNN layer actually moves
+        caps[name] = plan_capacities(edges, np.asarray(res.assignment),
+                                     stream.num_vertices, k)
         print(f"{name:7s} rf={sh.replication_factor:6.3f} "
-              f"sync={comm[name]/2**20:8.2f} MiB/layer")
+              f"sync={comm[name]/2**20:8.2f} MiB/layer  halo-plan: "
+              f"v_cap={caps[name]['v_cap']} e_cap={caps[name]['e_cap']} "
+              f"b_cap={caps[name]['b_cap']} "
+              f"(mean pair {caps[name]['pair_mean']:.1f})")
+    b_ratio = caps["random"]["b_cap"] / max(caps["2psl"]["b_cap"], 1)
     print(f"2PS-L cuts per-layer sync {comm['random']/comm['2psl']:.2f}x "
-          "vs hashing\n")
+          f"and the boundary lane {b_ratio:.2f}x vs hashing\n")
 
     # ---- train the GIN on the (2PS-L partitioned) graph ----
     cfg = GINConfig(name="gin", d_in=d_feat, n_classes=n_classes)

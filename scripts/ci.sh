@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint.
+#
+#   scripts/ci.sh          fast loop: CPU backend, slow SPMD subprocess
+#                          tests excluded (stays well under a minute)
+#   scripts/ci.sh --full   the complete tier-1 suite
+#
+# Extra args after the mode flag are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+marker=(-m "not slow")
+if [[ "${1:-}" == "--full" ]]; then
+    marker=()
+    shift
+fi
+
+exec python -m pytest -x -q "${marker[@]}" "$@"

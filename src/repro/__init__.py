@@ -1,0 +1,9 @@
+"""repro — out-of-core edge partitioning (2PS-L) + the SPMD runtime it feeds.
+
+Importing the package installs the small JAX compat shim (see ``_compat``)
+so the newer mesh API spelling used throughout the codebase works on the
+pinned jax version.
+"""
+from . import _compat
+
+_compat.install()

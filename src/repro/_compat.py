@@ -1,0 +1,86 @@
+"""JAX API compatibility shims.
+
+The sharding surface of this repo (launch/mesh.py, the SPMD tests) is
+written against the post-0.4.37 mesh API, where ``jax.make_mesh`` takes an
+``axis_types`` keyword and ``jax.sharding.AxisType`` names the axis kinds.
+On 0.4.x every mesh axis already behaves like the later ``AxisType.Auto``
+(GSPMD propagates shardings freely and ``with_sharding_constraint`` pins
+them), so the shim is semantically a no-op: it only makes the newer
+spelling importable/callable.
+
+Installed once from ``repro/__init__`` and idempotent: on a JAX that has
+the real API, nothing is touched.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import glob
+import inspect
+import os
+
+
+import jax
+
+
+def install() -> None:
+    _default_backend_env()
+    _install_axis_type()
+    _install_make_mesh_axis_types()
+
+
+def _default_backend_env() -> None:
+    """Pin the backend to CPU on accelerator-less hosts.
+
+    The image ships libtpu; without a platform pin, jax probes the TPU
+    plugin first, and on a non-TPU machine with no usable GCP metadata
+    server that probe RETRIES metadata fetches for minutes before falling
+    back to CPU (measured: the 8-device SPMD subprocess tests blow their
+    300 s timeout on it — they run with a stripped environment, so an
+    interactive ``JAX_PLATFORMS=cpu`` doesn't reach them).  Only applied
+    when the user hasn't pinned a platform and no accelerator device node
+    exists, so real TPU/GPU hosts are untouched."""
+    if "JAX_PLATFORMS" in os.environ or "JAX_PLATFORM_NAME" in os.environ:
+        return
+    if (glob.glob("/dev/accel*") or glob.glob("/dev/nvidia*")
+            or glob.glob("/dev/kfd") or glob.glob("/dev/vfio/[0-9]*")):
+        return
+    os.environ["JAX_PLATFORMS"] = "cpu"      # reaches child processes
+    try:
+        # jax snapshots JAX_PLATFORMS at import; scripts import jax before
+        # repro, so mirror the default into the live config too (no-op once
+        # a backend is initialized — then devices already exist).
+        jax.config.update("jax_platforms", "cpu")
+    except Exception:  # noqa: BLE001 — backend already up; leave it alone
+        pass
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh_axis_types() -> None:
+    orig = jax.make_mesh
+    # explicit sentinel, not a signature check: functools.wraps sets
+    # __wrapped__ and inspect.signature() follows it, so a signature probe
+    # of an already-installed shim would see the original and wrap again
+    if getattr(orig, "_repro_axis_types_shim", False):
+        return
+    if "axis_types" in inspect.signature(orig).parameters:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # axis_types is accepted and dropped: 0.4.x mesh axes are Auto.
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    make_mesh._repro_axis_types_shim = True
+    jax.make_mesh = make_mesh

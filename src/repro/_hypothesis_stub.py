@@ -1,0 +1,78 @@
+"""Deterministic stand-in for the slice of the ``hypothesis`` API the test
+suite uses (``given``/``settings`` + ``integers``/``lists``/``sampled_from``
+strategies).
+
+The container image cannot install packages, so ``tests/conftest.py``
+registers this module under ``sys.modules['hypothesis']`` ONLY when the
+real library is absent — with hypothesis installed, nothing here runs.
+Examples are drawn from a per-test seeded PRNG, so runs are reproducible;
+there is no shrinking, which only matters when a property fails.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements: _Strategy, *, min_size=0, max_size=10) -> _Strategy:
+    def sample(rng):
+        return [elements.example(rng)
+                for _ in range(rng.randint(min_size, max_size))]
+    return _Strategy(sample)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, booleans=booleans,
+    floats=floats, lists=lists)
+
+
+def settings(max_examples: int = 20, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 20))
+            rng = random.Random(fn.__qualname__)   # reproducible per test
+            for _ in range(n):
+                vals = [s.example(rng) for s in strats]
+                kvals = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *vals, **{**kwargs, **kvals})
+        # NOTE: no functools.wraps — pytest must see the (*args, **kwargs)
+        # signature, not the strategy parameters (they are not fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_max_examples = getattr(fn, "_stub_max_examples", 20)
+        return wrapper
+    return deco

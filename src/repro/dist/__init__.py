@@ -1,0 +1,42 @@
+"""repro.dist — distributed execution: sharding rules + partition-aware
+halo-exchange runtime.
+
+This subsystem is the bridge from the paper's artifact (a per-edge
+partition id stream from 2PS-L) to SPMD execution, in three stages:
+
+1. **partition** (repro.core): a streaming partitioner assigns every edge
+   to one of k partitions while minimizing the vertex replication factor
+   (RF) — the paper's quality metric, because RF IS the per-layer
+   synchronization volume of the downstream graph computation.
+
+2. **plan** (dist.partitioned_gnn): ``plan_halo_exchange`` converts the
+   assignment into a static, padded ``HaloPlan`` — per-partition local edge
+   arrays + local->global vertex maps (the DGL partition-book shape), plus
+   symmetric per-pair send/recv boundary tables and a quantile-capped psum
+   overflow lane.  ``plan_capacities`` computes just the capacity envelope
+   (v_cap/e_cap/b_cap/RF) for manifests and ahead-of-time compilation.
+
+3. **SPMD** (dist.sharding + dist.partitioned_gnn): ``make_partitioned_
+   gin_step`` runs one partition per device under ``shard_map`` — local
+   ``segment_sum`` partials, one tiled all_to_all per GNN layer over the
+   boundary tables, masters-only psum loss.  ``dist.sharding`` owns the
+   mesh-aware PartitionSpec rules (``constrain``, ``best_spec``,
+   ``lm_param_specs``, ...) used by every jit-lowered cell in the repo, so
+   partitioned GNN training composes with the LM/recsys sharding layouts
+   on the same meshes.
+"""
+from .sharding import (best_spec, constrain, fsdp_axes, gnn_batch_specs,
+                       lm_batch_specs, lm_cache_specs, lm_param_specs,
+                       opt_state_specs, recsys_batch_specs,
+                       recsys_param_specs)
+from .partitioned_gnn import (HaloPlan, make_partitioned_gin_step,
+                              partitioned_gin_loss, plan_capacities,
+                              plan_halo_exchange)
+
+__all__ = [
+    "best_spec", "constrain", "fsdp_axes", "gnn_batch_specs",
+    "lm_batch_specs", "lm_cache_specs", "lm_param_specs", "opt_state_specs",
+    "recsys_batch_specs", "recsys_param_specs", "HaloPlan",
+    "make_partitioned_gin_step", "partitioned_gin_loss", "plan_capacities",
+    "plan_halo_exchange",
+]

@@ -6,11 +6,19 @@
 Reads the paper's binary format (pairs of little-endian uint32 vertex ids),
 streams it in chunks (O(|V|*k) device state only), writes one int32
 partition id per edge, and prints the paper's metrics.
+
+``--plan-json PATH`` additionally runs ``dist.partitioned_gnn.
+plan_capacities`` on the finished assignment and writes a DGL-style
+partition manifest (k, capacities, replication factor, per-partition edge
+counts) next to the assignment memmap, so downstream SPMD training can
+allocate its halo-exchange buffers without touching the graph again.
 """
 from __future__ import annotations
 
 import argparse
 import json
+
+import numpy as np
 
 from repro.core import (MemmapEdgeStream, PARTITIONERS, ThrottledEdgeStream)
 
@@ -27,6 +35,12 @@ def main(argv=None):
     ap.add_argument("--chunk-size", type=int, default=1 << 16)
     ap.add_argument("--out", default=None,
                     help="write int32 assignment memmap here")
+    ap.add_argument("--plan-json", default=None,
+                    help="write a DGL-style partition manifest (halo-plan "
+                         "capacities + replication factor) to this path. "
+                         "NOTE: planning is in-memory (O(|E|) peak, unlike "
+                         "the out-of-core partitioning pass) — see "
+                         "ROADMAP 'out-of-core planning'")
     ap.add_argument("--throttle-mbps", type=float, default=None,
                     help="simulate a storage device with this read rate")
     ap.add_argument("--json", action="store_true")
@@ -52,11 +66,43 @@ def main(argv=None):
         **{k: v for k, v in res.extras.items()
            if isinstance(v, (int, float, str))},
     }
+    if args.plan_json:
+        manifest = _partition_manifest(args, res, stream)
+        with open(args.plan_json, "w") as f:
+            json.dump(manifest, f, indent=2)
+        report["plan_json"] = args.plan_json
+        report["v_cap"] = manifest["halo_plan"]["v_cap"]
+        report["b_cap"] = manifest["halo_plan"]["b_cap"]
+
     if args.json:
         print(json.dumps(report, indent=2))
     else:
         for k, v in report.items():
             print(f"{k:24s} {v}")
+
+
+def _partition_manifest(args, res, stream) -> dict:
+    """DGL partition-book shape: one JSON describing every part, plus the
+    halo-plan capacity envelope the SPMD runtime allocates from."""
+    from repro.dist.partitioned_gnn import plan_capacities
+
+    edges = np.memmap(args.input, dtype=np.uint32, mode="r").reshape(-1, 2)
+    caps = plan_capacities(edges, np.asarray(res.assignment),
+                           stream.num_vertices, args.k)
+    return {
+        "graph_name": args.input,
+        "part_method": res.name,
+        "num_parts": args.k,
+        "num_nodes": stream.num_vertices,
+        "num_edges": stream.num_edges,
+        "assignment_path": args.out,
+        "replication_factor": caps["replication_factor"],
+        "halo_plan": {kk: caps[kk] for kk in
+                      ("v_cap", "e_cap", "b_cap", "o_cap", "pair_mean",
+                       "covered_vertices")},
+        "parts": [{"part_id": p, "num_edges": n}
+                  for p, n in enumerate(caps["edge_counts"])],
+    }
 
 
 if __name__ == "__main__":

@@ -3,8 +3,31 @@
 NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
 single real CPU device.  Only launch/dryrun.py forces 512 placeholder devices.
 """
+import sys
+
 import numpy as np
 import pytest
+
+try:                                    # the image cannot pip install;
+    import hypothesis                   # noqa: F401
+except ImportError:                     # fall back to the deterministic stub
+    from repro import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+
+# The multi-device SPMD checks spawn a subprocess with 8 emulated host
+# devices and recompile the whole step — minutes, not seconds.  They are
+# marked here (not in their files, which pin the public dist API verbatim)
+# so scripts/ci.sh can keep the fast loop under a minute with -m "not slow".
+_SLOW_SUBPROCESS_TESTS = {
+    "test_spmd_train_step_matches_single_device",
+    "test_partitioned_gin_matches_dense_reference",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.name.split("[")[0] in _SLOW_SUBPROCESS_TESTS:
+            item.add_marker(pytest.mark.slow)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,116 @@
+"""HaloPlan degenerate-input coverage: k=1, an empty partition, isolated
+vertices, and a quantile cap small enough to force the psum overflow lane.
+Every case must keep the two core invariants: (a) full edge coverage with
+correct local->global mapping, (b) send/recv pair symmetry."""
+import numpy as np
+import pytest
+
+from repro.dist.partitioned_gnn import plan_capacities, plan_halo_exchange
+
+
+def _graph(seed=0, V=60, E=400):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, V, (E, 2)).astype(np.int32)
+    return e[e[:, 0] != e[:, 1]]
+
+
+def _assert_coverage(plan, edges, assignment):
+    assert plan.edge_mask.sum() == len(edges)
+    for p in range(plan.k):
+        n = int(plan.edge_mask[p].sum())
+        loc = plan.edges[p, :n]
+        glob = plan.vmap_global[p][loc]
+        expect = edges[assignment == p]
+        np.testing.assert_array_equal(np.sort(glob, axis=0),
+                                      np.sort(expect, axis=0))
+
+
+def _assert_symmetry(plan):
+    for p in range(plan.k):
+        assert (plan.send_idx[p, p] < 0).all(), "self-exchange lane"
+        for q in range(plan.k):
+            s, r = plan.send_idx[p, q], plan.recv_idx[q, p]
+            ns, nr = (s >= 0).sum(), (r >= 0).sum()
+            assert ns == nr
+            if ns:
+                gs = plan.vmap_global[p][s[:ns]]
+                gr = plan.vmap_global[q][r[:nr]]
+                np.testing.assert_array_equal(gs, gr)
+
+
+def test_k_equals_one():
+    edges = _graph(seed=1)
+    V = int(edges.max()) + 1
+    asg = np.zeros(len(edges), np.int64)
+    plan = plan_halo_exchange(edges, asg, V, 1)
+    _assert_coverage(plan, edges, asg)
+    _assert_symmetry(plan)
+    assert plan.b_cap == 0 and plan.o_cap == 0
+    assert plan.replication_factor == 1.0
+    assert plan.v_cap == len(np.unique(edges))
+
+
+def test_partition_with_zero_edges():
+    edges = _graph(seed=2)
+    V = int(edges.max()) + 1
+    k = 4
+    asg = np.arange(len(edges)) % (k - 1)      # partition 3 gets nothing
+    plan = plan_halo_exchange(edges, asg, V, k)
+    _assert_coverage(plan, edges, asg)
+    _assert_symmetry(plan)
+    assert plan.edge_counts[k - 1] == 0
+    assert (plan.vmap_global[k - 1] == -1).all()
+    assert plan.node_mask[k - 1].sum() == 0
+    assert (plan.send_idx[k - 1] < 0).all()
+    assert (plan.recv_idx[:, k - 1] < 0).all()
+
+
+def test_isolated_vertices_absent_everywhere():
+    edges = _graph(seed=3, V=40)
+    V = int(edges.max()) + 1 + 25              # 25 vertices touch no edge
+    k = 4
+    asg = (edges[:, 0] % k).astype(np.int64)
+    plan = plan_halo_exchange(edges, asg, V, k)
+    _assert_coverage(plan, edges, asg)
+    _assert_symmetry(plan)
+    present = np.unique(plan.vmap_global[plan.vmap_global >= 0])
+    covered = np.unique(edges)
+    np.testing.assert_array_equal(present, covered)
+    # RF denominator is COVERED vertices, so isolated ones don't dilute it
+    caps = plan_capacities(edges, asg, V, k)
+    assert caps["covered_vertices"] == len(covered)
+    assert plan.replication_factor >= 1.0
+
+
+@pytest.mark.parametrize("quantile", [0.25, 0.5])
+def test_quantile_cap_forces_overflow(quantile):
+    edges = _graph(seed=4, V=50, E=600)
+    V = int(edges.max()) + 1
+    k = 6
+    rng = np.random.default_rng(7)
+    asg = rng.integers(0, k, len(edges)).astype(np.int64)
+    full = plan_halo_exchange(edges, asg, V, k)
+    plan = plan_halo_exchange(edges, asg, V, k, pair_cap_quantile=quantile)
+    assert plan.b_cap < full.b_cap
+    assert plan.o_cap > 0 and (plan.ov_idx >= 0).any()
+    _assert_coverage(plan, edges, asg)
+    _assert_symmetry(plan)
+    # no pair lane exceeds the cap
+    assert (plan.send_idx >= 0).sum(axis=-1).max() <= plan.b_cap
+    # every overflow slot is held by >= 2 partitions and every replica of a
+    # pairwise-exchanged vertex still reaches every peer holding it:
+    # overflow vertices must vanish from ALL pair lanes
+    held = plan.ov_idx >= 0
+    assert (held.sum(axis=0) >= 2).all()
+    ov_globals = set()
+    for p in range(k):
+        vs = plan.vmap_global[p][plan.ov_idx[p][held[p]]]
+        ov_globals.update(vs.tolist())
+    for p in range(k):
+        for q in range(k):
+            s = plan.send_idx[p, q]
+            sent = plan.vmap_global[p][s[s >= 0]]
+            assert not ov_globals.intersection(sent.tolist())
+    # capacities agree with the materialized plan
+    caps = plan_capacities(edges, asg, V, k, pair_cap_quantile=quantile)
+    assert caps["b_cap"] == plan.b_cap and caps["o_cap"] == plan.o_cap
