@@ -1,4 +1,10 @@
-"""Shared benchmark utilities: graph corpus, timed runs, CSV emission."""
+"""Shared benchmark utilities: graph corpus, timed runs, CSV emission.
+
+Partitioner configuration goes through the spec registry
+(``repro.core.spec_for``): ``bench_spec`` layers the benchmark corpus'
+tuned chunk sizes on top of each algorithm's canonical spec, replacing the
+old ad-hoc ``RUNNER_KW`` kwarg table.
+"""
 from __future__ import annotations
 
 import time
@@ -6,18 +12,22 @@ from functools import lru_cache
 
 import numpy as np
 
-from repro.core import InMemoryEdgeStream, run_partitioner
+from repro.core import InMemoryEdgeStream, run_spec, spec_for
 from repro.data import scaled_benchmark_graphs
 
-RUNNER_KW = {
+# benchmark-corpus chunk sizes (small graphs -> smaller chunks keep the
+# stateful partitioners' size snapshots fresh)
+BENCH_OVERRIDES = {
     "2psl": {"chunk_size": 1 << 14},
     "2ps-hdrf": {"chunk_size": 4096},
     "hdrf": {"chunk_size": 4096},
     "greedy": {"chunk_size": 4096},
-    "dbh": {},
-    "grid": {},
-    "random": {},
 }
+
+
+def bench_spec(name: str, **kw):
+    """Canonical spec for ``name`` with benchmark presets + overrides."""
+    return spec_for(name, **{**BENCH_OVERRIDES.get(name, {}), **kw})
 
 
 @lru_cache(maxsize=1)
@@ -29,13 +39,13 @@ def corpus():
 def timed_run(name: str, stream, k: int, *, repeats: int = 1, **kw):
     """Warm-up once (compile), then time ``repeats`` runs; returns
     (result, mean_seconds)."""
-    merged = {**RUNNER_KW.get(name, {}), **kw}
-    run_partitioner(name, stream, k, **merged)     # warm-up
+    spec = bench_spec(name, **kw)
+    run_spec(spec, stream, k)                      # warm-up
     times = []
     res = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        res = run_partitioner(name, stream, k, **merged)
+        res = run_spec(spec, stream, k)
         times.append(time.perf_counter() - t0)
     return res, float(np.mean(times))
 

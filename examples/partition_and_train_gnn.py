@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import InMemoryEdgeStream, run_2psl, run_random
+from repro.core import InMemoryEdgeStream, run_spec, spec_for
 from repro.core.integration import build_device_shards, comm_volume_per_layer
 from repro.data.gnn_batches import full_graph_batch
 from repro.dist.partitioned_gnn import plan_capacities
@@ -34,9 +34,10 @@ def main():
 
     # ---- partition with 2PS-L and with hashing ----
     comm, caps = {}, {}
-    for name, runner in [("2psl", run_2psl), ("random", run_random)]:
-        kw = {"chunk_size": 1 << 14} if name == "2psl" else {}
-        res = runner(stream, k, **kw)
+    specs = [spec_for("2psl", chunk_size=1 << 14), spec_for("random")]
+    for spec in specs:
+        name = spec.algorithm
+        res = run_spec(spec, stream, k)
         sh = build_device_shards(edges, np.asarray(res.assignment),
                                  stream.num_vertices, k)
         comm[name] = comm_volume_per_layer(sh, d_hidden=64)

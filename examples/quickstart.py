@@ -4,8 +4,7 @@
 """
 import time
 
-from repro.core import InMemoryEdgeStream, run_2psl, run_dbh, run_hdrf, \
-    run_random
+from repro.core import InMemoryEdgeStream, run_spec, spec_for
 from repro.data import rmat_graph, planted_partition_graph
 
 
@@ -21,15 +20,15 @@ def main():
         stream = InMemoryEdgeStream(edges)
         print(f"\n--- {name}: |V|={stream.num_vertices:,} "
               f"|E|={stream.num_edges:,}  k={k} ---")
-        for label, runner, kw in [
-            ("2PS-L   ", run_2psl, {"chunk_size": 1 << 14}),
-            ("HDRF    ", run_hdrf, {"chunk_size": 4096}),
-            ("DBH     ", run_dbh, {}),
-            ("random  ", run_random, {}),
+        for label, spec in [
+            ("2PS-L   ", spec_for("2psl", chunk_size=1 << 14)),
+            ("HDRF    ", spec_for("hdrf", chunk_size=4096)),
+            ("DBH     ", spec_for("dbh")),
+            ("random  ", spec_for("random")),
         ]:
-            runner(stream, k, **kw)                 # warm-up (jit)
+            run_spec(spec, stream, k)               # warm-up (jit)
             t0 = time.perf_counter()
-            res = runner(stream, k, **kw)
+            res = run_spec(spec, stream, k)
             dt = time.perf_counter() - t0
             q = res.quality
             print(f"{label} rf={q.replication_factor:6.3f} "

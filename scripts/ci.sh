@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 CI entrypoint.
 #
-#   scripts/ci.sh          fast loop: CPU backend, slow SPMD subprocess
-#                          tests excluded (stays well under a minute)
-#   scripts/ci.sh --full   the complete tier-1 suite
+#   scripts/ci.sh          fast loop: CLI smoke stage + CPU backend pytest,
+#                          slow SPMD subprocess tests excluded
+#   scripts/ci.sh --full   CLI smoke stage + the complete tier-1 suite
 #
 # Extra args after the mode flag are forwarded to pytest.
 set -euo pipefail
@@ -18,4 +18,37 @@ if [[ "${1:-}" == "--full" ]]; then
     shift
 fi
 
-exec python -m pytest -x -q "${marker[@]}" "$@"
+# ---- CLI smoke stage: partition a tiny memmapped graph end-to-end into a
+# PartitionArtifact, then reload assignment + cached halo plan ------------
+smoke_dir=$(mktemp -d)
+trap 'rm -rf "$smoke_dir"' EXIT
+python - "$smoke_dir" <<'PY'
+import sys
+import numpy as np
+rng = np.random.default_rng(0)
+e = rng.integers(0, 64, (600, 2)).astype(np.uint32)
+e = e[e[:, 0] != e[:, 1]]
+e.tofile(sys.argv[1] + "/graph.bin")
+PY
+python -m repro.launch.partition \
+    --input "$smoke_dir/graph.bin" --k 4 --algorithm 2psl \
+    --chunk-size 256 --artifact-dir "$smoke_dir/artifact" --json \
+    > "$smoke_dir/report.json"
+python - "$smoke_dir" <<'PY'
+import json, sys
+import numpy as np
+from repro.core import PartitionArtifact
+report = json.load(open(sys.argv[1] + "/report.json"))
+art = PartitionArtifact.load(sys.argv[1] + "/artifact")
+asg = np.asarray(art.assignment)
+assert len(asg) == art.num_edges and asg.min() >= 0 and asg.max() < art.k
+plan = art.halo_plan()          # cached — reloads without the graph
+assert plan.k == art.k == report["k"] == 4
+assert plan.b_cap == report["b_cap"]
+assert art.spec.algorithm == "2psl"
+print(f"CLI smoke OK: rf={report['replication_factor']:.3f} "
+      f"b_cap={plan.b_cap}")
+PY
+
+# no exec: the EXIT trap must still fire to clean up the smoke dir
+python -m pytest -x -q "${marker[@]}" "$@"

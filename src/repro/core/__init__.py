@@ -1,13 +1,24 @@
-"""2PS-L: out-of-core edge partitioning at linear run-time (the paper's core)."""
+"""2PS-L: out-of-core edge partitioning at linear run-time (the paper's core).
+
+Public partitioning API (PR 2): declarative ``PartitionerSpec``s executed by
+one streaming engine (``run_spec``), yielding durable ``PartitionArtifact``s.
+The ``run_*`` / ``PARTITIONERS`` entry points are legacy shims over it.
+"""
+from .artifact import PartitionArtifact
 from .clustering import (ClusteringResult, cluster_in_memory_scan,
                          cluster_sequential, default_max_vol,
                          streaming_clustering)
+from .engine import (PartitionRunResult, StreamingPartitioner, StreamPass,
+                     build_partitioner, run_spec)
 from .mapping import map_clusters_lpt, map_clusters_lpt_jax
 from .metrics import (PartitionQuality, capacity, quality_from_assignment,
                       quality_from_bitmatrix)
-from .pipeline import (PARTITIONERS, PartitionRunResult, run_2ps_hdrf,
-                       run_2psl, run_dbh, run_greedy, run_grid, run_hdrf,
-                       run_partitioner, run_random)
+from .pipeline import (PARTITIONERS, run_2ps_hdrf, run_2psl, run_dbh,
+                       run_greedy, run_grid, run_hdrf, run_partitioner,
+                       run_random)
+from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, SpecError,
+                    SPEC_REGISTRY, StatelessSpec, TwoPSLSpec, spec_for,
+                    spec_from_dict)
 from .stream import (BYTES_PER_EDGE, EdgeStream, InMemoryEdgeStream,
                      MemmapEdgeStream, ThrottledEdgeStream, compute_degrees)
 
@@ -21,4 +32,9 @@ __all__ = [
     "run_hdrf", "run_partitioner", "run_random", "BYTES_PER_EDGE",
     "EdgeStream", "InMemoryEdgeStream", "MemmapEdgeStream",
     "ThrottledEdgeStream", "compute_degrees",
+    # spec / engine / artifact API
+    "PartitionerSpec", "TwoPSLSpec", "HDRFSpec", "DBHSpec", "StatelessSpec",
+    "SpecError", "SPEC_REGISTRY", "spec_for", "spec_from_dict",
+    "StreamingPartitioner", "StreamPass", "build_partitioner", "run_spec",
+    "PartitionArtifact",
 ]

@@ -1,0 +1,174 @@
+"""Durable, reloadable partition artifacts.
+
+A ``PartitionArtifact`` persists everything downstream jobs need from a
+partitioning run — so the paper's partition -> plan -> distributed
+processing pipeline never re-streams the graph after the partitioner has
+run once.  Directory layout::
+
+    <dir>/
+      assignment.bin    (E,) int32 edge -> partition memmap
+      manifest.json     spec (to_dict), graph meta, quality, timings,
+                        halo-plan capacity envelope, per-part edge counts
+      halo_plan.npz     the full padded HaloPlan arrays (optional)
+
+``PartitionArtifact.load(dir)`` memmaps the assignment lazily and
+rebuilds cached ``HaloPlan``s straight from the ``.npz`` — closing the
+ROADMAP "plan caching" follow-up: ``artifact.halo_plan()`` is bit-identical
+to a fresh ``plan_halo_exchange`` without touching the edge stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from .engine import PartitionRunResult
+from .specs import PartitionerSpec, spec_from_dict
+
+ASSIGNMENT_FILE = "assignment.bin"
+MANIFEST_FILE = "manifest.json"
+HALO_PLAN_FILE = "halo_plan.npz"
+FORMAT_VERSION = 1
+
+#: HaloPlan fields that are plain ints/floats (stored as 0-d npz entries).
+_PLAN_SCALARS = ("k", "v_cap", "e_cap", "b_cap", "o_cap",
+                 "replication_factor")
+
+
+def _json_safe(d: dict) -> dict:
+    return {k: v for k, v in d.items()
+            if isinstance(v, (int, float, str, bool))}
+
+
+@dataclass
+class PartitionArtifact:
+    """Handle to a persisted partition (see module docstring)."""
+
+    path: str
+    manifest: dict
+    _assignment: np.ndarray | None = None
+    _plan: object | None = None            # cached HaloPlan
+
+    # -- accessors -------------------------------------------------------
+    @property
+    def k(self) -> int:
+        return int(self.manifest["k"])
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.manifest["num_vertices"])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.manifest["num_edges"])
+
+    @property
+    def spec(self) -> PartitionerSpec:
+        return spec_from_dict(self.manifest["spec"])
+
+    @property
+    def assignment(self) -> np.ndarray:
+        """(E,) int32 edge -> partition ids, memmapped read-only."""
+        if self._assignment is None:
+            self._assignment = np.memmap(
+                os.path.join(self.path, ASSIGNMENT_FILE), dtype=np.int32,
+                mode="r", shape=(self.num_edges,))
+        return self._assignment
+
+    def has_halo_plan(self) -> bool:
+        return os.path.exists(os.path.join(self.path, HALO_PLAN_FILE))
+
+    def halo_plan(self):
+        """Reload the persisted ``HaloPlan`` (cached; no graph IO)."""
+        if self._plan is None:
+            from repro.dist.partitioned_gnn import HaloPlan
+            npz_path = os.path.join(self.path, HALO_PLAN_FILE)
+            if not os.path.exists(npz_path):
+                raise FileNotFoundError(
+                    f"{self.path} was saved without a halo plan; re-save "
+                    f"with plan= or edges= to enable plan caching")
+            with np.load(npz_path) as z:
+                kw = {name: z[name] for name in z.files
+                      if name not in _PLAN_SCALARS}
+                kw.update({name: type_(z[name][()])
+                           for name, type_ in zip(
+                               _PLAN_SCALARS,
+                               (int, int, int, int, int, float))})
+            self._plan = HaloPlan(**kw)
+        return self._plan
+
+    # -- persistence -----------------------------------------------------
+    @classmethod
+    def save(cls, path: str, result: PartitionRunResult, *,
+             num_vertices: int, num_edges: int,
+             spec: PartitionerSpec | None = None,
+             plan=None, edges: np.ndarray | None = None,
+             pair_cap_quantile: float = 1.0,
+             graph_path: str | None = None) -> "PartitionArtifact":
+        """Persist a run.  The halo plan is taken from ``plan`` if given,
+        else computed from ``edges`` (in-memory planning — see ROADMAP
+        "out-of-core planning"); with neither, the artifact carries only
+        assignment + manifest."""
+        spec = spec if spec is not None else result.spec
+        if spec is None:
+            raise ValueError("no spec: pass spec= or run via run_spec")
+        os.makedirs(path, exist_ok=True)
+
+        asg_path = os.path.join(path, ASSIGNMENT_FILE)
+        asg = result.assignment
+        if (isinstance(asg, np.memmap)
+                and os.path.realpath(asg.filename) ==
+                os.path.realpath(asg_path)):
+            asg.flush()                    # engine already wrote in place
+        else:
+            np.asarray(asg, dtype=np.int32).tofile(asg_path)
+
+        if plan is None and edges is not None:
+            from repro.dist.partitioned_gnn import plan_halo_exchange
+            plan = plan_halo_exchange(edges, np.asarray(asg), num_vertices,
+                                      result.k,
+                                      pair_cap_quantile=pair_cap_quantile)
+
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "spec": spec.to_dict(),
+            "algorithm": result.name,
+            "k": result.k,
+            "num_vertices": int(num_vertices),
+            "num_edges": int(num_edges),
+            "graph_path": graph_path,
+            "assignment_path": ASSIGNMENT_FILE,
+            "replication_factor": result.quality.replication_factor,
+            "alpha_measured": result.quality.balance,
+            "timings_s": {kk: round(v, 6)
+                          for kk, v in result.timings.items()},
+            "simulated_io_s": round(result.simulated_io_seconds, 6),
+            "extras": _json_safe(result.extras),
+            "halo_plan": None,
+        }
+        if plan is not None:
+            arrays = {f.name: getattr(plan, f.name)
+                      for f in dataclasses.fields(plan)}
+            np.savez(os.path.join(path, HALO_PLAN_FILE), **arrays)
+            manifest["halo_plan"] = {
+                "path": HALO_PLAN_FILE,
+                "pair_cap_quantile": pair_cap_quantile,
+                **{s: getattr(plan, s) for s in _PLAN_SCALARS},
+            }
+        with open(os.path.join(path, MANIFEST_FILE), "w") as f:
+            json.dump(manifest, f, indent=2)
+        return cls(path=path, manifest=manifest, _assignment=None,
+                   _plan=plan)
+
+    @classmethod
+    def load(cls, path: str) -> "PartitionArtifact":
+        with open(os.path.join(path, MANIFEST_FILE)) as f:
+            manifest = json.load(f)
+        version = manifest.get("format_version")
+        if version != FORMAT_VERSION:
+            raise ValueError(f"{path}: unsupported artifact format "
+                             f"{version!r} (want {FORMAT_VERSION})")
+        return cls(path=path, manifest=manifest)

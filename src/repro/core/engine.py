@@ -1,0 +1,337 @@
+"""The single out-of-core streaming engine behind every partitioner.
+
+One driver (``run_spec``) owns everything the seven per-algorithm chunk
+loops used to duplicate: chunk iteration + padding, assignment memmap
+allocation and writing, merge-vs-overwrite bookkeeping for multi-pass
+algorithms, per-pass admission counting (the pre-partition ratio), phase
+timing, device synchronization, and simulated-IO accounting.
+
+Each algorithm plugs in as a ``StreamingPartitioner`` state machine:
+
+    init_state(stream, k, timer, degrees)  -> device state pytree
+    passes()                               -> [StreamPass(phase, chunk_fn,
+                                                          merge), ...]
+    chunk_fn(state, padded_chunk)          -> (state, (C,) assignment)
+    finalize(state, pass_counts)           -> (bits, sizes, extras)
+
+``merge=False`` passes overwrite the assignment slice wholesale (first
+pass / single-pass algorithms); ``merge=True`` passes only write rows the
+pass actually assigned (2PS-L's scoring pass refining the pre-partition
+pass).  The engine streams the graph once per pass, so device state stays
+O(|V|*k) bits regardless of |E| — the paper's out-of-core property.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops, partitioning as P
+from .clustering import streaming_clustering
+from .mapping import map_clusters_lpt
+from .metrics import PartitionQuality, capacity, quality_from_bitmatrix
+from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, StatelessSpec,
+                    TwoPSLSpec)
+from .stream import EdgeStream, compute_degrees
+
+
+@dataclass
+class PartitionRunResult:
+    name: str
+    k: int
+    alpha: float
+    assignment: np.ndarray                 # (E,) int32 edge -> partition
+    quality: PartitionQuality
+    timings: dict = field(default_factory=dict)   # phase -> seconds
+    extras: dict = field(default_factory=dict)
+    simulated_io_seconds: float = 0.0
+    spec: PartitionerSpec | None = None
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.timings.values()) + self.simulated_io_seconds
+
+
+class _Timer:
+    def __init__(self):
+        self.t = {}
+        self._last = time.perf_counter()
+
+    def lap(self, name):
+        now = time.perf_counter()
+        self.t[name] = self.t.get(name, 0.0) + (now - self._last)
+        self._last = now
+
+
+def _alloc_assignment(num_edges: int, out_path: str | None):
+    if out_path is None:
+        return np.full(num_edges, -1, np.int32)
+    mm = np.memmap(out_path, dtype=np.int32, mode="w+", shape=(num_edges,))
+    mm[:] = -1
+    return mm
+
+
+@dataclass
+class StreamPass:
+    """One sequential sweep over the edge stream."""
+    phase: str                                        # timer / counter label
+    chunk_fn: Callable[[dict, P.PaddedChunk], tuple]  # (state, pc) ->
+    #                                                   (state, (C,) asg)
+    merge: bool = False   # True: only rows with asg >= 0 overwrite
+
+
+class StreamingPartitioner:
+    """Plug-in protocol (see module docstring).  Subclasses hold only the
+    spec + host-side metadata; all streaming state lives in the pytree
+    returned by ``init_state`` and threaded through ``chunk_fn``."""
+
+    display_name: str = ""
+
+    def init_state(self, stream: EdgeStream, k: int, timer: _Timer,
+                   degrees: np.ndarray | None) -> dict:
+        raise NotImplementedError
+
+    def passes(self) -> Sequence[StreamPass]:
+        raise NotImplementedError
+
+    def finalize(self, state: dict, pass_counts: dict) -> tuple:
+        """-> (bits, sizes, extras)."""
+        return state["bits"], state["sizes"], {}
+
+
+# ---------------------------------------------------------------------------
+# 2PS-L / 2PS-HDRF
+# ---------------------------------------------------------------------------
+
+class _TwoPSLPartitioner(StreamingPartitioner):
+    def __init__(self, spec: TwoPSLSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def init_state(self, stream, k, timer, degrees):
+        sp = self.spec
+        self.k, self.cap = k, capacity(stream.num_edges, k, sp.alpha)
+        self._num_edges = stream.num_edges
+        if degrees is None:
+            degrees = compute_degrees(stream, sp.chunk_size)
+        timer.lap("degrees")
+        clus = streaming_clustering(stream, degrees, k=k,
+                                    max_vol_factor=sp.max_vol_factor,
+                                    passes=sp.cluster_passes,
+                                    chunk_size=sp.chunk_size)
+        timer.lap("clustering")
+        c2p, part_vol = map_clusters_lpt(clus.vol, k)
+        timer.lap("mapping")
+        self._clus, self._part_vol = clus, part_vol
+        return {
+            "bits": bitops.alloc_jnp(stream.num_vertices, k),
+            "sizes": jnp.zeros((k,), jnp.int32),
+            "d": jnp.asarray(degrees, jnp.int32),
+            "vol": jnp.asarray(clus.vol, jnp.int32),
+            "v2c": jnp.asarray(clus.v2c, jnp.int32),
+            "c2p": jnp.asarray(c2p, jnp.int32),
+        }
+
+    def passes(self):
+        return [StreamPass("prepartition", self._prepartition),
+                StreamPass("scoring", self._score, merge=True)]
+
+    def _prepartition(self, st, pc):
+        bits, sizes, asg, _ = P._prepartition_chunk(
+            st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
+            pc.edges, pc.valid, k=self.k, cap=self.cap)
+        return {**st, "bits": bits, "sizes": sizes}, asg
+
+    def _score(self, st, pc):
+        if self.spec.scoring == "2psl":
+            bits, sizes, asg = P._score_chunk(
+                st["bits"], st["sizes"], st["d"], st["vol"], st["v2c"],
+                st["c2p"], pc.edges, pc.valid, k=self.k, cap=self.cap)
+        else:
+            bits, sizes, asg = P._hdrf_remaining_chunk(
+                st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
+                pc.edges, pc.valid, k=self.k, cap=self.cap,
+                lam=self.spec.hdrf_lambda)
+        return {**st, "bits": bits, "sizes": sizes}, asg
+
+    def finalize(self, state, pass_counts):
+        extras = {
+            "prepartition_ratio":
+                pass_counts.get("prepartition", 0) / max(self._num_edges, 1),
+            "num_clusters": self._clus.num_clusters,
+            "max_vol": self._clus.max_vol,
+            "cluster_passes": self.spec.cluster_passes,
+            "part_volumes": np.asarray(self._part_vol),
+        }
+        return state["bits"], state["sizes"], extras
+
+
+# ---------------------------------------------------------------------------
+# HDRF / Greedy
+# ---------------------------------------------------------------------------
+
+class _HDRFPartitioner(StreamingPartitioner):
+    def __init__(self, spec: HDRFSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def init_state(self, stream, k, timer, degrees):
+        self.k = k
+        self.cap = capacity(stream.num_edges, k, self.spec.alpha)
+        return {
+            "bits": bitops.alloc_jnp(stream.num_vertices, k),
+            "sizes": jnp.zeros((k,), jnp.int32),
+            # HDRF's own streamed partial degrees
+            "dpart": jnp.zeros((stream.num_vertices,), jnp.int32),
+        }
+
+    def passes(self):
+        return [StreamPass("scoring", self._chunk)]
+
+    def _chunk(self, st, pc):
+        sp = self.spec
+        bits, sizes, dpart, asg = P._hdrf_chunk(
+            st["bits"], st["sizes"], st["dpart"], pc.edges, pc.valid,
+            k=self.k, cap=self.cap, lam=sp.lam, use_cap=sp.use_cap,
+            degree_weighted=sp.degree_weighted)
+        return {"bits": bits, "sizes": sizes, "dpart": dpart}, asg
+
+
+# ---------------------------------------------------------------------------
+# stateless hashing family (DBH / Grid / Random)
+# ---------------------------------------------------------------------------
+
+class _HashPartitioner(StreamingPartitioner):
+    """Shared driver for the per-edge hash partitioners: the chunk kernel
+    is pure, the engine pass just folds the result into bits/sizes."""
+
+    phase = "hashing"
+
+    def init_state(self, stream, k, timer, degrees):
+        self.k = k
+        return {"bits": bitops.alloc_jnp(stream.num_vertices, k),
+                "sizes": jnp.zeros((k,), jnp.int32)}
+
+    def passes(self):
+        return [StreamPass(self.phase, self._chunk)]
+
+    def _hash_chunk(self, st, pc):
+        raise NotImplementedError
+
+    def _chunk(self, st, pc):
+        asg = self._hash_chunk(st, pc)
+        bits = P._apply_bits(st["bits"], pc.edges, asg)
+        sizes = st["sizes"].at[jnp.where(asg >= 0, asg, self.k)].add(
+            1, mode="drop")
+        return {**st, "bits": bits, "sizes": sizes}, asg
+
+
+class _DBHPartitioner(_HashPartitioner):
+    def __init__(self, spec: DBHSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def init_state(self, stream, k, timer, degrees):
+        if degrees is None:
+            degrees = compute_degrees(stream, self.spec.chunk_size)
+        st = super().init_state(stream, k, timer, degrees)
+        st["d"] = jnp.asarray(degrees, jnp.int32)
+        timer.lap("degrees")
+        return st
+
+    def _hash_chunk(self, st, pc):
+        return P._dbh_chunk(st["d"], pc.edges, pc.valid, k=self.k)
+
+
+class _GridPartitioner(_HashPartitioner):
+    def __init__(self, spec: StatelessSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def init_state(self, stream, k, timer, degrees):
+        rows = int(math.isqrt(k))
+        while k % rows:
+            rows -= 1
+        self.rows, self.cols = rows, k // rows
+        return super().init_state(stream, k, timer, degrees)
+
+    def _hash_chunk(self, st, pc):
+        return P._grid_chunk(pc.edges, pc.valid, k=self.k, rows=self.rows,
+                             cols=self.cols)
+
+
+class _RandomPartitioner(_HashPartitioner):
+    def __init__(self, spec: StatelessSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def _hash_chunk(self, st, pc):
+        return P._random_hash_chunk(pc.edges, pc.valid, k=self.k)
+
+
+def build_partitioner(spec: PartitionerSpec) -> StreamingPartitioner:
+    """Spec -> plug-in state machine for ``run_spec``."""
+    if isinstance(spec, TwoPSLSpec):
+        return _TwoPSLPartitioner(spec)
+    if isinstance(spec, HDRFSpec):
+        return _HDRFPartitioner(spec)
+    if isinstance(spec, DBHSpec):
+        return _DBHPartitioner(spec)
+    if isinstance(spec, StatelessSpec):
+        return (_GridPartitioner if spec.variant == "grid"
+                else _RandomPartitioner)(spec)
+    raise TypeError(f"no streaming partitioner for {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# the one driver
+# ---------------------------------------------------------------------------
+
+def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
+             out_path: str | None = None,
+             degrees: np.ndarray | None = None) -> PartitionRunResult:
+    """Execute a PartitionerSpec over an edge stream.
+
+    ``out_path`` writes the assignment as an int32 memmap instead of an
+    in-memory array; ``degrees`` short-circuits the upfront degree pass for
+    algorithms that need one (2PS-L family, DBH).
+    """
+    part = build_partitioner(spec)
+    timer = _Timer()
+    state = part.init_state(stream, k, timer, degrees)
+    assignment = _alloc_assignment(stream.num_edges, out_path)
+
+    pass_counts: dict[str, int] = {}
+    for sp in part.passes():
+        lo = 0
+        assigned = 0
+        for chunk in stream.iter_chunks(spec.chunk_size):
+            pc = P.pad_chunk(chunk, spec.chunk_size)
+            state, asg = sp.chunk_fn(state, pc)
+            asg_np = np.asarray(asg[:pc.n])
+            if sp.merge:
+                sel = asg_np >= 0
+                assignment[lo:lo + pc.n][sel] = asg_np[sel]
+                assigned += int(sel.sum())
+            else:
+                assignment[lo:lo + pc.n] = asg_np
+                assigned += int((asg_np >= 0).sum())
+            lo += pc.n
+        jax.block_until_ready(state)
+        timer.lap(sp.phase)
+        pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + assigned
+
+    bits, sizes, extras = part.finalize(state, pass_counts)
+    sizes_np = np.asarray(sizes)
+    quality = quality_from_bitmatrix(np.asarray(bits), sizes_np,
+                                     stream.num_edges)
+    return PartitionRunResult(
+        name=part.display_name, k=k, alpha=spec.alpha,
+        assignment=assignment, quality=quality, timings=timer.t,
+        extras=extras, simulated_io_seconds=stream.simulated_io_seconds,
+        spec=spec)

@@ -26,8 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitops, partitioning as P
+from .engine import PartitionRunResult, run_spec
 from .metrics import capacity, quality_from_bitmatrix
-from .pipeline import PartitionRunResult, run_2psl
+from .specs import TwoPSLSpec
 from .stream import EdgeStream, InMemoryEdgeStream
 
 
@@ -68,9 +69,16 @@ class PartitionerState:
 
 def bootstrap(stream: EdgeStream, k: int, *, alpha: float = 1.05,
               chunk_size: int = 1 << 16, headroom: float = 1.5,
+              spec: TwoPSLSpec | None = None,
               **kw) -> tuple[PartitionRunResult, PartitionerState]:
-    """Initial batch 2PS-L run + retained incremental state."""
-    res = run_2psl(stream, k, alpha=alpha, chunk_size=chunk_size, **kw)
+    """Initial batch 2PS-L run + retained incremental state.
+
+    Configure via a ``TwoPSLSpec`` or the legacy alpha/chunk_size kwargs
+    (ignored when ``spec`` is given)."""
+    if spec is None:
+        spec = TwoPSLSpec(alpha=alpha, chunk_size=chunk_size, **kw)
+    alpha, chunk_size = spec.alpha, spec.chunk_size
+    res = run_spec(spec, stream, k)
     from .clustering import streaming_clustering
     from .mapping import map_clusters_lpt
     from .stream import compute_degrees

@@ -80,13 +80,23 @@ def partition_speedup_report(edges: np.ndarray, assignments: dict[str, np.ndarra
 
 
 def bipartite_partition(user_hist: np.ndarray, num_users: int,
-                        num_items: int, k: int, run_partitioner, **kw):
+                        num_items: int, k: int, partitioner, **kw):
     """Recsys adapter: treat the user->item interaction multiset as a
     bipartite graph (items offset past users) and edge-partition it, so that
     a user's history edges co-locate with the embedding shards that serve
-    them.  ``user_hist``: (n_interactions, 2) of (user_id, item_id)."""
+    them.  ``user_hist``: (n_interactions, 2) of (user_id, item_id).
+
+    ``partitioner`` is either a ``PartitionerSpec`` (run through the
+    streaming engine; extra kwargs override spec fields) or a legacy
+    ``run_*`` callable."""
+    from .specs import PartitionerSpec
     from .stream import InMemoryEdgeStream
     edges = user_hist.copy().astype(np.int32)
     edges[:, 1] += num_users
     stream = InMemoryEdgeStream(edges, num_vertices=num_users + num_items)
-    return run_partitioner(stream, k, **kw)
+    if isinstance(partitioner, PartitionerSpec):
+        from .engine import run_spec
+        if kw:
+            partitioner = partitioner.replace(**kw)
+        return run_spec(partitioner, stream, k)
+    return partitioner(stream, k, **kw)

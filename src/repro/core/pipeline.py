@@ -1,76 +1,34 @@
-"""End-to-end partitioner drivers: 2PS-L plus all baselines, one API.
+"""Legacy partitioner entry points — thin shims over the spec/engine API.
 
-Each driver streams the graph out-of-core (host pulls chunks, device holds
-O(|V|*k) state), returns a ``PartitionRunResult`` with the paper's metrics
-(replication factor, measured alpha, per-phase timings, pre-partition ratio).
+The real machinery lives in :mod:`repro.core.specs` (declarative
+``PartitionerSpec`` hierarchy + name registry), :mod:`repro.core.engine`
+(the single out-of-core streaming driver every partitioner plugs into) and
+:mod:`repro.core.artifact` (durable ``PartitionArtifact`` outputs).  New
+code should build a spec and call ``run_spec``::
+
+    from repro.core import run_spec, spec_for
+    res = run_spec(spec_for("2psl", chunk_size=1 << 14), stream, k)
+
+The ``run_*`` functions and the ``PARTITIONERS`` name->function dict below
+are kept for existing call sites: each one translates its keyword surface
+onto the matching spec and forwards to the engine, so results (including
+assignments, timings keys and extras) are identical to the historical
+per-algorithm drivers.
 """
 from __future__ import annotations
 
-import math
-import time
-from dataclasses import dataclass, field
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import bitops, partitioning as P
-from .clustering import (ClusteringResult, default_max_vol,
-                         streaming_clustering)
-from .mapping import map_clusters_lpt
-from .metrics import PartitionQuality, capacity, quality_from_bitmatrix
-from .stream import EdgeStream, compute_degrees
+from .engine import PartitionRunResult, run_spec
+from .specs import DBHSpec, HDRFSpec, StatelessSpec, TwoPSLSpec
+from .stream import EdgeStream
 
+__all__ = [
+    "PARTITIONERS", "PartitionRunResult", "run_2ps_hdrf", "run_2psl",
+    "run_dbh", "run_greedy", "run_grid", "run_hdrf", "run_partitioner",
+    "run_random",
+]
 
-@dataclass
-class PartitionRunResult:
-    name: str
-    k: int
-    alpha: float
-    assignment: np.ndarray                 # (E,) int32 edge -> partition
-    quality: PartitionQuality
-    timings: dict = field(default_factory=dict)   # phase -> seconds
-    extras: dict = field(default_factory=dict)
-    simulated_io_seconds: float = 0.0
-
-    @property
-    def total_seconds(self) -> float:
-        return sum(self.timings.values()) + self.simulated_io_seconds
-
-
-class _Timer:
-    def __init__(self):
-        self.t = {}
-        self._last = time.perf_counter()
-
-    def lap(self, name):
-        now = time.perf_counter()
-        self.t[name] = self.t.get(name, 0.0) + (now - self._last)
-        self._last = now
-
-
-def _alloc_assignment(num_edges: int, out_path: str | None):
-    if out_path is None:
-        return np.full(num_edges, -1, np.int32)
-    mm = np.memmap(out_path, dtype=np.int32, mode="w+", shape=(num_edges,))
-    mm[:] = -1
-    return mm
-
-
-def _finalize(name, stream, k, alpha, assignment, bits, sizes, timer,
-              extras) -> PartitionRunResult:
-    sizes_np = np.asarray(sizes)
-    quality = quality_from_bitmatrix(np.asarray(bits), sizes_np,
-                                     stream.num_edges)
-    return PartitionRunResult(
-        name=name, k=k, alpha=alpha, assignment=assignment, quality=quality,
-        timings=timer.t, extras=extras,
-        simulated_io_seconds=stream.simulated_io_seconds)
-
-
-# ---------------------------------------------------------------------------
-# 2PS-L (the paper)
-# ---------------------------------------------------------------------------
 
 def run_2psl(stream: EdgeStream, k: int, *, alpha: float = 1.05,
              cluster_passes: int = 1, max_vol_factor: float = 1.0,
@@ -79,175 +37,59 @@ def run_2psl(stream: EdgeStream, k: int, *, alpha: float = 1.05,
              scoring: str = "2psl") -> PartitionRunResult:
     """Full 2PS-L.  ``scoring='hdrf'`` gives the paper's 2PS-HDRF variant
     (phase 2 step 3 scores all k partitions with the HDRF function)."""
-    timer = _Timer()
-    V, E = stream.num_vertices, stream.num_edges
-    cap = capacity(E, k, alpha)
-
-    if degrees is None:
-        degrees = compute_degrees(stream, chunk_size)
-    timer.lap("degrees")
-
-    clus = streaming_clustering(stream, degrees, k=k,
-                                max_vol_factor=max_vol_factor,
-                                passes=cluster_passes, chunk_size=chunk_size)
-    timer.lap("clustering")
-
-    c2p, part_vol = map_clusters_lpt(clus.vol, k)
-    timer.lap("mapping")
-
-    d = jnp.asarray(degrees, jnp.int32)
-    vol = jnp.asarray(clus.vol, jnp.int32)
-    v2c = jnp.asarray(clus.v2c, jnp.int32)
-    c2p_j = jnp.asarray(c2p, jnp.int32)
-    bits = bitops.alloc_jnp(V, k)
-    sizes = jnp.zeros((k,), jnp.int32)
-    assignment = _alloc_assignment(E, out_path)
-
-    # ---- Step 2: pre-partitioning pass -------------------------------
-    n_pre = 0
-    lo = 0
-    for chunk in stream.iter_chunks(chunk_size):
-        pc = P.pad_chunk(chunk, chunk_size)
-        bits, sizes, asg, remaining = P._prepartition_chunk(
-            bits, sizes, d, v2c, c2p_j, pc.edges, pc.valid, k=k, cap=cap)
-        asg_np = np.asarray(asg[:pc.n])
-        assignment[lo:lo + pc.n] = asg_np
-        n_pre += int((asg_np >= 0).sum())
-        lo += pc.n
-    jax.block_until_ready(sizes)
-    timer.lap("prepartition")
-
-    # ---- Step 3: linear scoring pass ----------------------------------
-    lo = 0
-    for chunk in stream.iter_chunks(chunk_size):
-        pc = P.pad_chunk(chunk, chunk_size)
-        if scoring == "2psl":
-            bits, sizes, asg = P._score_chunk(
-                bits, sizes, d, vol, v2c, c2p_j, pc.edges, pc.valid,
-                k=k, cap=cap)
-        elif scoring == "hdrf":
-            bits, sizes, asg = P._hdrf_remaining_chunk(
-                bits, sizes, d, v2c, c2p_j, pc.edges, pc.valid,
-                k=k, cap=cap, lam=1.1)
-        else:
-            raise ValueError(scoring)
-        asg_np = np.asarray(asg[:pc.n])
-        sel = asg_np >= 0
-        assignment[lo:lo + pc.n][sel] = asg_np[sel]
-        lo += pc.n
-    jax.block_until_ready(sizes)
-    timer.lap("scoring")
-
-    extras = {
-        "prepartition_ratio": n_pre / max(E, 1),
-        "num_clusters": clus.num_clusters,
-        "max_vol": clus.max_vol,
-        "cluster_passes": cluster_passes,
-        "part_volumes": np.asarray(part_vol),
-    }
-    name = "2PS-L" if scoring == "2psl" else "2PS-HDRF"
-    return _finalize(name, stream, k, alpha, assignment, bits, sizes, timer,
-                     extras)
+    spec = TwoPSLSpec(alpha=alpha, chunk_size=chunk_size,
+                      cluster_passes=cluster_passes,
+                      max_vol_factor=max_vol_factor, scoring=scoring)
+    return run_spec(spec, stream, k, out_path=out_path, degrees=degrees)
 
 
 def run_2ps_hdrf(stream, k, **kw):
-    return run_2psl(stream, k, scoring="hdrf", **kw)
+    kw.setdefault("scoring", "hdrf")
+    return run_2psl(stream, k, **kw)
 
-
-# ---------------------------------------------------------------------------
-# Streaming baselines
-# ---------------------------------------------------------------------------
 
 def run_hdrf(stream: EdgeStream, k: int, *, alpha: float = 1.05,
              lam: float = 1.1, use_cap: bool = False,
              chunk_size: int = 1 << 13, degree_weighted: bool = True,
-             name: str = "HDRF",
+             name: str | None = None,
              out_path: str | None = None) -> PartitionRunResult:
     """Plain HDRF — the O(|E|*k) stateful streaming baseline.
     ``degree_weighted=False`` = PowerGraph Greedy."""
-    timer = _Timer()
-    V, E = stream.num_vertices, stream.num_edges
-    cap = capacity(E, k, alpha)
-    bits = bitops.alloc_jnp(V, k)
-    sizes = jnp.zeros((k,), jnp.int32)
-    dpart = jnp.zeros((V,), jnp.int32)       # HDRF's streamed partial degrees
-    assignment = _alloc_assignment(E, out_path)
-    lo = 0
-    for chunk in stream.iter_chunks(chunk_size):
-        pc = P.pad_chunk(chunk, chunk_size)
-        bits, sizes, dpart, asg = P._hdrf_chunk(
-            bits, sizes, dpart, pc.edges, pc.valid, k=k, cap=cap, lam=lam,
-            use_cap=use_cap, degree_weighted=degree_weighted)
-        assignment[lo:lo + pc.n] = np.asarray(asg[:pc.n])
-        lo += pc.n
-    jax.block_until_ready(sizes)
-    timer.lap("scoring")
-    return _finalize(name, stream, k, alpha, assignment, bits, sizes,
-                     timer, {})
+    spec = HDRFSpec(alpha=alpha, chunk_size=chunk_size, lam=lam,
+                    use_cap=use_cap, degree_weighted=degree_weighted,
+                    name=name)
+    return run_spec(spec, stream, k, out_path=out_path)
 
 
-def _run_stateless(name, stream, k, alpha, chunk_fn, chunk_size, out_path):
-    timer = _Timer()
-    V, E = stream.num_vertices, stream.num_edges
-    bits = bitops.alloc_jnp(V, k)
-    sizes = jnp.zeros((k,), jnp.int32)
-    assignment = _alloc_assignment(E, out_path)
-    lo = 0
-    for chunk in stream.iter_chunks(chunk_size):
-        pc = P.pad_chunk(chunk, chunk_size)
-        asg = chunk_fn(pc)
-        bits = P._apply_bits(bits, pc.edges, asg)
-        sizes = sizes.at[jnp.where(asg >= 0, asg, k)].add(1, mode="drop")
-        assignment[lo:lo + pc.n] = np.asarray(asg[:pc.n])
-        lo += pc.n
-    jax.block_until_ready(sizes)
-    timer.lap("hashing")
-    return _finalize(name, stream, k, alpha, assignment, bits, sizes,
-                     timer, {})
+def run_greedy(stream, k, **kw):
+    """PowerGraph Greedy: HDRF scoring without the degree weighting.
+
+    Caller kwargs win over the preset (``name=...`` used to collide with
+    the hard-passed ``name='Greedy'``)."""
+    kw.setdefault("degree_weighted", False)
+    return run_hdrf(stream, k, **kw)
 
 
 def run_dbh(stream: EdgeStream, k: int, *, alpha: float = 1.05,
             chunk_size: int = 1 << 18, degrees: np.ndarray | None = None,
             out_path: str | None = None) -> PartitionRunResult:
-    timer = _Timer()
-    if degrees is None:
-        degrees = compute_degrees(stream, chunk_size)
-    d = jnp.asarray(degrees, jnp.int32)
-    timer.lap("degrees")
-    res = _run_stateless(
-        "DBH", stream, k, alpha,
-        lambda pc: P._dbh_chunk(d, pc.edges, pc.valid, k=k),
-        chunk_size, out_path)
-    res.timings.update(timer.t)
-    return res
+    spec = DBHSpec(alpha=alpha, chunk_size=chunk_size)
+    return run_spec(spec, stream, k, out_path=out_path, degrees=degrees)
 
 
 def run_grid(stream: EdgeStream, k: int, *, alpha: float = 1.05,
              chunk_size: int = 1 << 18,
              out_path: str | None = None) -> PartitionRunResult:
-    rows = int(math.isqrt(k))
-    while k % rows:
-        rows -= 1
-    cols = k // rows
-    return _run_stateless(
-        "Grid", stream, k, alpha,
-        lambda pc: P._grid_chunk(pc.edges, pc.valid, k=k, rows=rows,
-                                 cols=cols),
-        chunk_size, out_path)
+    spec = StatelessSpec(alpha=alpha, chunk_size=chunk_size, variant="grid")
+    return run_spec(spec, stream, k, out_path=out_path)
 
 
 def run_random(stream: EdgeStream, k: int, *, alpha: float = 1.05,
                chunk_size: int = 1 << 18,
                out_path: str | None = None) -> PartitionRunResult:
-    return _run_stateless(
-        "Random", stream, k, alpha,
-        lambda pc: P._random_hash_chunk(pc.edges, pc.valid, k=k),
-        chunk_size, out_path)
-
-
-def run_greedy(stream, k, **kw):
-    """PowerGraph Greedy: HDRF scoring without the degree weighting."""
-    return run_hdrf(stream, k, degree_weighted=False, name="Greedy", **kw)
+    spec = StatelessSpec(alpha=alpha, chunk_size=chunk_size,
+                         variant="random")
+    return run_spec(spec, stream, k, out_path=out_path)
 
 
 PARTITIONERS = {
@@ -261,6 +103,10 @@ PARTITIONERS = {
 }
 
 
-def run_partitioner(name: str, stream: EdgeStream, k: int,
+def run_partitioner(algorithm: str, stream: EdgeStream, k: int,
                     **kw) -> PartitionRunResult:
-    return PARTITIONERS[name](stream, k, **kw)
+    """Run a registered partitioner by name.  (The first parameter used to
+    be called ``name``, shadowing the display-name kwarg of the HDRF
+    family — ``run_partitioner('greedy', ..., name=...)`` was a
+    TypeError.)"""
+    return PARTITIONERS[algorithm](stream, k, **kw)

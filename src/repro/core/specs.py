@@ -1,0 +1,209 @@
+"""Declarative partitioner specifications.
+
+A ``PartitionerSpec`` is a frozen, validated, JSON-serializable description
+of *how* to partition — algorithm plus hyper-parameters, never graph data.
+Specs are the single configuration currency of the partitioning stack:
+
+* the streaming engine (``engine.run_spec``) executes them — every
+  partitioner is a plug-in state machine over the same out-of-core driver;
+* ``PartitionArtifact`` manifests embed them (``to_dict``/``from_dict``), so
+  a persisted partition records exactly how it was produced and can be
+  reproduced from the manifest alone;
+* the name registry (``spec_for`` / ``SPEC_REGISTRY``) replaces the old
+  ``PARTITIONERS`` name->function dict and the benchmarks' ad-hoc kwarg
+  tables: one canonical name per algorithm variant, presets included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import ClassVar
+
+
+class SpecError(ValueError):
+    """A PartitionerSpec failed validation."""
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise SpecError(msg)
+
+
+@dataclass(frozen=True)
+class PartitionerSpec:
+    """Base spec: balance slack + streaming chunk size, shared by all
+    algorithms.  Subclasses add algorithm hyper-parameters and must define
+    the ``algorithm`` registry key via the ``algorithm`` property."""
+
+    alpha: float = 1.05
+    chunk_size: int = 1 << 16
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- validation ------------------------------------------------------
+    def validate(self):
+        _check(isinstance(self.alpha, (int, float)) and self.alpha >= 1.0,
+               f"alpha must be >= 1.0 (got {self.alpha!r})")
+        _check(isinstance(self.chunk_size, int) and self.chunk_size > 0,
+               f"chunk_size must be a positive int (got {self.chunk_size!r})")
+
+    # -- identity --------------------------------------------------------
+    @property
+    def algorithm(self) -> str:
+        """Canonical registry key (e.g. '2psl', 'greedy')."""
+        raise NotImplementedError
+
+    @property
+    def display_name(self) -> str:
+        """Human-readable name used in results/reports."""
+        raise NotImplementedError
+
+    # -- serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        d = {"algorithm": self.algorithm}
+        d.update(dataclasses.asdict(self))
+        return d
+
+    def replace(self, **overrides) -> "PartitionerSpec":
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class TwoPSLSpec(PartitionerSpec):
+    """2PS-L (the paper) and its 2PS-HDRF variant (``scoring='hdrf'``)."""
+
+    cluster_passes: int = 1
+    max_vol_factor: float = 1.0
+    scoring: str = "2psl"          # '2psl' | 'hdrf' (phase-2 step-3 scorer)
+    hdrf_lambda: float = 1.1       # only used when scoring == 'hdrf'
+
+    def validate(self):
+        super().validate()
+        _check(isinstance(self.cluster_passes, int)
+               and self.cluster_passes >= 1,
+               f"cluster_passes must be >= 1 (got {self.cluster_passes!r})")
+        _check(self.max_vol_factor > 0,
+               f"max_vol_factor must be > 0 (got {self.max_vol_factor!r})")
+        _check(self.scoring in ("2psl", "hdrf"),
+               f"scoring must be '2psl' or 'hdrf' (got {self.scoring!r})")
+        _check(self.hdrf_lambda > 0,
+               f"hdrf_lambda must be > 0 (got {self.hdrf_lambda!r})")
+
+    @property
+    def algorithm(self) -> str:
+        return "2psl" if self.scoring == "2psl" else "2ps-hdrf"
+
+    @property
+    def display_name(self) -> str:
+        return "2PS-L" if self.scoring == "2psl" else "2PS-HDRF"
+
+
+@dataclass(frozen=True)
+class HDRFSpec(PartitionerSpec):
+    """HDRF (degree-weighted) / PowerGraph Greedy (``degree_weighted=False``)
+    — the O(|E|*k) stateful streaming baselines."""
+
+    chunk_size: int = 1 << 13
+    lam: float = 1.1
+    use_cap: bool = False
+    degree_weighted: bool = True
+    name: str | None = None        # display-name override
+
+    #: micro-batch width of the scan inside the HDRF chunk kernel — the
+    #: chunk must tile evenly so partition-size staleness stays bounded.
+    MICRO_BATCH: ClassVar[int] = 64
+
+    def validate(self):
+        super().validate()
+        _check(self.lam > 0, f"lam must be > 0 (got {self.lam!r})")
+        _check(self.chunk_size % self.MICRO_BATCH == 0,
+               f"HDRF chunk_size must be a multiple of {self.MICRO_BATCH} "
+               f"(got {self.chunk_size!r})")
+
+    @property
+    def algorithm(self) -> str:
+        return "hdrf" if self.degree_weighted else "greedy"
+
+    @property
+    def display_name(self) -> str:
+        if self.name is not None:
+            return self.name
+        return "HDRF" if self.degree_weighted else "Greedy"
+
+
+@dataclass(frozen=True)
+class DBHSpec(PartitionerSpec):
+    """Degree-based hashing (Xie et al.): one degree pass, then stateless
+    hashing of the lower-degree endpoint."""
+
+    chunk_size: int = 1 << 18
+
+    @property
+    def algorithm(self) -> str:
+        return "dbh"
+
+    @property
+    def display_name(self) -> str:
+        return "DBH"
+
+
+@dataclass(frozen=True)
+class StatelessSpec(PartitionerSpec):
+    """Pure hashing partitioners needing no vertex state at all."""
+
+    chunk_size: int = 1 << 18
+    variant: str = "random"        # 'random' | 'grid'
+
+    def validate(self):
+        super().validate()
+        _check(self.variant in ("random", "grid"),
+               f"variant must be 'random' or 'grid' (got {self.variant!r})")
+
+    @property
+    def algorithm(self) -> str:
+        return self.variant
+
+    @property
+    def display_name(self) -> str:
+        return {"random": "Random", "grid": "Grid"}[self.variant]
+
+
+# ---------------------------------------------------------------------------
+# registry: canonical name -> (spec class, presets)
+# ---------------------------------------------------------------------------
+
+SPEC_REGISTRY: dict[str, tuple[type, dict]] = {
+    "2psl": (TwoPSLSpec, {}),
+    "2ps-hdrf": (TwoPSLSpec, {"scoring": "hdrf"}),
+    "hdrf": (HDRFSpec, {}),
+    "greedy": (HDRFSpec, {"degree_weighted": False}),
+    "dbh": (DBHSpec, {}),
+    "grid": (StatelessSpec, {"variant": "grid"}),
+    "random": (StatelessSpec, {"variant": "random"}),
+}
+
+
+def spec_for(name: str, **overrides) -> PartitionerSpec:
+    """Build the canonical spec for a registered algorithm name, applying
+    keyword overrides on top of the name's presets."""
+    try:
+        cls, presets = SPEC_REGISTRY[name]
+    except KeyError:
+        raise SpecError(f"unknown partitioner {name!r}; known: "
+                        f"{sorted(SPEC_REGISTRY)}") from None
+    return cls(**{**presets, **overrides})
+
+
+def spec_from_dict(d: dict) -> PartitionerSpec:
+    """Inverse of ``PartitionerSpec.to_dict`` (manifest deserialization)."""
+    d = dict(d)
+    try:
+        name = d.pop("algorithm")
+    except KeyError:
+        raise SpecError("spec dict is missing the 'algorithm' key") from None
+    if name not in SPEC_REGISTRY:
+        raise SpecError(f"unknown partitioner {name!r}; known: "
+                        f"{sorted(SPEC_REGISTRY)}")
+    cls, presets = SPEC_REGISTRY[name]
+    return cls(**{**presets, **d})

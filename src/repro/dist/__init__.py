@@ -15,6 +15,8 @@ partition id stream from 2PS-L) to SPMD execution, in three stages:
    symmetric per-pair send/recv boundary tables and a quantile-capped psum
    overflow lane.  ``plan_capacities`` computes just the capacity envelope
    (v_cap/e_cap/b_cap/RF) for manifests and ahead-of-time compilation.
+   Plans persist inside a ``repro.core.PartitionArtifact`` and reload via
+   ``load_halo_plan`` without ever re-reading the edge stream.
 
 3. **SPMD** (dist.sharding + dist.partitioned_gnn): ``make_partitioned_
    gin_step`` runs one partition per device under ``shard_map`` — local
@@ -29,7 +31,12 @@ from .sharding import (best_spec, constrain, fsdp_axes, gnn_batch_specs,
                        lm_batch_specs, lm_cache_specs, lm_param_specs,
                        opt_state_specs, recsys_batch_specs,
                        recsys_param_specs)
-from .partitioned_gnn import (HaloPlan, make_partitioned_gin_step,
+from .partitioned_gnn import (HaloPlan, capacities_from_plan,
+                              load_halo_plan,
+                              make_partitioned_gatedgcn_step,
+                              make_partitioned_gin_step,
+                              make_partitioned_gnn_step,
+                              partitioned_gatedgcn_loss,
                               partitioned_gin_loss, plan_capacities,
                               plan_halo_exchange)
 
@@ -37,6 +44,9 @@ __all__ = [
     "best_spec", "constrain", "fsdp_axes", "gnn_batch_specs",
     "lm_batch_specs", "lm_cache_specs", "lm_param_specs", "opt_state_specs",
     "recsys_batch_specs", "recsys_param_specs", "HaloPlan",
-    "make_partitioned_gin_step", "partitioned_gin_loss", "plan_capacities",
+    "capacities_from_plan", "load_halo_plan",
+    "make_partitioned_gatedgcn_step",
+    "make_partitioned_gin_step", "make_partitioned_gnn_step",
+    "partitioned_gatedgcn_loss", "partitioned_gin_loss", "plan_capacities",
     "plan_halo_exchange",
 ]

@@ -33,6 +33,7 @@ dense single-process reference.
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass
 
 import numpy as np
@@ -245,6 +246,31 @@ def _local_ids(vmap_global, part_counts, ps, vs):
     return out
 
 
+def capacities_from_plan(plan: HaloPlan) -> dict:
+    """The ``plan_capacities`` dict derived from an already-built plan —
+    manifests written next to a persisted plan need no second pass over
+    the planning core."""
+    nz = plan.pair_sizes[plan.pair_sizes > 0]
+    vm = plan.vmap_global
+    return {
+        "k": plan.k, "v_cap": plan.v_cap, "e_cap": plan.e_cap,
+        "b_cap": plan.b_cap, "o_cap": plan.o_cap,
+        "replication_factor": plan.replication_factor,
+        "covered_vertices": int(len(np.unique(vm[vm >= 0]))),
+        "pair_mean": float(nz.mean()) if len(nz) else 0.0,
+        "edge_counts": [int(n) for n in plan.edge_counts],
+    }
+
+
+def load_halo_plan(artifact) -> HaloPlan:
+    """HaloPlan from a ``PartitionArtifact`` (or its directory path) —
+    the cached-plan path: no edge stream is read."""
+    if isinstance(artifact, (str, bytes, os.PathLike)):
+        from repro.core.artifact import PartitionArtifact
+        artifact = PartitionArtifact.load(os.fspath(artifact))
+    return artifact.halo_plan()
+
+
 # ---------------------------------------------------------------------------
 # SPMD execution
 # ---------------------------------------------------------------------------
@@ -309,14 +335,74 @@ def partitioned_gin_loss(cfg, params, batch, *, axes, v_cap):
     return -num / jnp.maximum(den, 1.0)
 
 
-def make_partitioned_gin_step(cfg, mesh, dims, *, lr=1e-3):
-    """shard_map SPMD GIN train step: one partition per device.
+def partitioned_gatedgcn_loss(cfg, params, batch, *, axes, v_cap):
+    """Per-device (shard_map body) GatedGCN loss over one partition.
 
-    ``dims`` needs ``{"k", "v_cap"}`` (``HaloPlan`` capacities or the
-    ``plan_capacities`` dict).  Batch layout: ``nodes (k, v_cap, d)``,
-    ``labels``/``loss_mask (k, v_cap)``, ``plan`` = HaloPlan.device_arrays.
-    Params are replicated; grads reduce through the loss psum."""
-    k, v_cap = int(dims["k"]), int(dims["v_cap"])
+    Same gated aggregation as the dense reference minus batchnorm (global
+    batch statistics break partition locality, as for GIN).  Edge features
+    are partition-local — every edge lives on exactly one device — so only
+    the two per-destination partial sums of the gated mean (numerator and
+    gate normalizer) go through ``_halo_combine``; the division happens
+    after both are globally reconciled."""
+    plan = batch["plan"]
+    nodes = batch["nodes"][0]                       # (v_cap, d_feat)
+    labels = batch["labels"][0]
+    lmask = batch["loss_mask"][0]
+    nmask = plan["node_mask"][0][:, None]
+    e = plan["edges"][0]
+    em = plan["edge_mask"][0][:, None]
+    combine = functools.partial(
+        _halo_combine, send=plan["send_idx"][0], recv=plan["recv_idx"][0],
+        ov=plan["ov_idx"][0], axes=axes, v_cap=v_cap)
+
+    src, dst = e[:, 0], e[:, 1]
+    h = L.dense(params["encoder"], nodes) * nmask
+    ea = jnp.ones((e.shape[0], 1), h.dtype)
+    ef = L.dense(params["edge_encoder"], ea)
+    for lp in params["layers"]:
+        e_new = (L.dense(lp["A"], h)[src] + L.dense(lp["B"], h)[dst]
+                 + L.dense(lp["C"], ef))
+        eta = jax.nn.sigmoid(e_new) * em
+        num = combine(jax.ops.segment_sum(eta * L.dense(lp["V"], h)[src],
+                                          dst, num_segments=v_cap))
+        den = combine(jax.ops.segment_sum(eta, dst, num_segments=v_cap))
+        h_new = L.dense(lp["U"], h) + num / (den + 1e-6)
+        h = (h + jax.nn.relu(h_new)) * nmask
+        ef = ef + jax.nn.relu(e_new)
+
+    logits = L.dense(params["head"], h).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    num = jax.lax.psum(jnp.sum(ll * lmask), axes)
+    den = jax.lax.psum(jnp.sum(lmask), axes)
+    return -num / jnp.maximum(den, 1.0)
+
+
+PARTITIONED_LOSSES = {"gin": partitioned_gin_loss,
+                      "gatedgcn": partitioned_gatedgcn_loss}
+
+
+def _plan_dims(dims) -> tuple[int, int]:
+    """(k, v_cap) from a capacities dict, a HaloPlan, or a
+    PartitionArtifact (which loads its cached plan)."""
+    if hasattr(dims, "halo_plan"):              # PartitionArtifact
+        dims = dims.halo_plan()
+    if isinstance(dims, HaloPlan):
+        return dims.k, dims.v_cap
+    return int(dims["k"]), int(dims["v_cap"])
+
+
+def make_partitioned_gnn_step(model, cfg, mesh, dims, *, lr=1e-3):
+    """shard_map SPMD GNN train step: one partition per device.
+
+    ``model`` is a ``PARTITIONED_LOSSES`` key ('gin', 'gatedgcn').  ``dims``
+    may be a ``HaloPlan``, a ``plan_capacities`` dict, or a
+    ``PartitionArtifact`` (whose persisted plan supplies the capacities).
+    Batch layout: ``nodes (k, v_cap, d)``, ``labels``/``loss_mask
+    (k, v_cap)``, ``plan`` = HaloPlan.device_arrays.  Params are
+    replicated; grads reduce through the loss psum."""
+    loss_body = PARTITIONED_LOSSES[model]
+    k, v_cap = _plan_dims(dims)
     axes = tuple(mesh.axis_names)
     n_dev = int(np.prod(np.shape(mesh.devices)))
     if k != n_dev:
@@ -325,8 +411,7 @@ def make_partitioned_gin_step(cfg, mesh, dims, *, lr=1e-3):
     part_spec = P(axes)
 
     def loss_fn(params, batch):
-        body = functools.partial(partitioned_gin_loss, cfg,
-                                 axes=axes, v_cap=v_cap)
+        body = functools.partial(loss_body, cfg, axes=axes, v_cap=v_cap)
         fn = shard_map(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params),
@@ -336,3 +421,11 @@ def make_partitioned_gin_step(cfg, mesh, dims, *, lr=1e-3):
 
     return make_train_step(loss_fn, linear_warmup_cosine(lr, 20, 2_000),
                            weight_decay=0.0)
+
+
+def make_partitioned_gin_step(cfg, mesh, dims, *, lr=1e-3):
+    return make_partitioned_gnn_step("gin", cfg, mesh, dims, lr=lr)
+
+
+def make_partitioned_gatedgcn_step(cfg, mesh, dims, *, lr=1e-3):
+    return make_partitioned_gnn_step("gatedgcn", cfg, mesh, dims, lr=lr)

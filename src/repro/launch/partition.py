@@ -1,26 +1,38 @@
 """2PS-L CLI — the paper's tool: partition a binary edge list out-of-core.
 
   python -m repro.launch.partition --input graph.bin --k 32 \
-      --algorithm 2psl --alpha 1.05 --out assignments.bin
+      --algorithm 2psl --alpha 1.05 --artifact-dir parts/
 
 Reads the paper's binary format (pairs of little-endian uint32 vertex ids),
-streams it in chunks (O(|V|*k) device state only), writes one int32
-partition id per edge, and prints the paper's metrics.
+builds the declarative ``PartitionerSpec`` for ``--algorithm`` (see
+``repro.core.specs``), and streams the graph through the single out-of-core
+engine (O(|V|*k) device state only), printing the paper's metrics.
 
-``--plan-json PATH`` additionally runs ``dist.partitioned_gnn.
-plan_capacities`` on the finished assignment and writes a DGL-style
-partition manifest (k, capacities, replication factor, per-partition edge
-counts) next to the assignment memmap, so downstream SPMD training can
-allocate its halo-exchange buffers without touching the graph again.
+Outputs, from lightest to heaviest:
+
+* ``--out PATH``          just the int32 per-edge assignment memmap.
+* ``--plan-json PATH``    additionally a DGL-style partition manifest
+                          (k, halo capacities, replication factor,
+                          per-partition edge counts).
+* ``--artifact-dir DIR``  a full persistent ``PartitionArtifact``:
+                          assignment memmap + JSON manifest (embedding the
+                          spec) + the padded halo-plan arrays (``.npz``).
+                          ``PartitionArtifact.load(DIR)`` then hands
+                          downstream SPMD training its cached ``HaloPlan``
+                          without re-streaming the graph.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import numpy as np
 
-from repro.core import (MemmapEdgeStream, PARTITIONERS, ThrottledEdgeStream)
+from repro.core import (MemmapEdgeStream, PartitionArtifact,
+                        SPEC_REGISTRY, ThrottledEdgeStream, run_spec,
+                        spec_for)
+from repro.core.artifact import ASSIGNMENT_FILE
 
 
 def main(argv=None):
@@ -29,18 +41,32 @@ def main(argv=None):
                     help="binary edge list (uint32 pairs)")
     ap.add_argument("--k", type=int, required=True)
     ap.add_argument("--algorithm", default="2psl",
-                    choices=sorted(PARTITIONERS))
+                    choices=sorted(SPEC_REGISTRY))
     ap.add_argument("--alpha", type=float, default=1.05)
     ap.add_argument("--cluster-passes", type=int, default=1)
     ap.add_argument("--chunk-size", type=int, default=1 << 16)
     ap.add_argument("--out", default=None,
                     help="write int32 assignment memmap here")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="persist a full PartitionArtifact (assignment + "
+                         "manifest + halo-plan arrays) in this directory. "
+                         "NOTE: halo planning is in-memory (O(|E|) peak, "
+                         "unlike the out-of-core partitioning pass — see "
+                         "ROADMAP 'out-of-core planning'); pass --no-plan "
+                         "to keep graph-sized runs out-of-core")
+    ap.add_argument("--no-plan", action="store_true",
+                    help="with --artifact-dir: skip the halo-plan arrays "
+                         "(assignment + manifest only, no O(|E|) planning "
+                         "pass)")
     ap.add_argument("--plan-json", default=None,
                     help="write a DGL-style partition manifest (halo-plan "
                          "capacities + replication factor) to this path. "
                          "NOTE: planning is in-memory (O(|E|) peak, unlike "
                          "the out-of-core partitioning pass) — see "
                          "ROADMAP 'out-of-core planning'")
+    ap.add_argument("--pair-cap-quantile", type=float, default=1.0,
+                    help="halo-plan boundary-table cap quantile (<1 moves "
+                         "over-cap pairs to the psum overflow lane)")
     ap.add_argument("--throttle-mbps", type=float, default=None,
                     help="simulate a storage device with this read rate")
     ap.add_argument("--json", action="store_true")
@@ -50,11 +76,17 @@ def main(argv=None):
     if args.throttle_mbps:
         stream = ThrottledEdgeStream(stream, args.throttle_mbps * 1e6)
 
-    kw = {"alpha": args.alpha, "chunk_size": args.chunk_size,
-          "out_path": args.out}
+    overrides = {"alpha": args.alpha, "chunk_size": args.chunk_size}
     if args.algorithm in ("2psl", "2ps-hdrf"):
-        kw["cluster_passes"] = args.cluster_passes
-    res = PARTITIONERS[args.algorithm](stream, args.k, **kw)
+        overrides["cluster_passes"] = args.cluster_passes
+    spec = spec_for(args.algorithm, **overrides)
+
+    out_path = args.out
+    if args.artifact_dir and out_path is None:
+        # stream the assignment straight into the artifact layout
+        os.makedirs(args.artifact_dir, exist_ok=True)
+        out_path = os.path.join(args.artifact_dir, ASSIGNMENT_FILE)
+    res = run_spec(spec, stream, args.k, out_path=out_path)
 
     report = {
         "algorithm": res.name, "k": args.k,
@@ -66,8 +98,24 @@ def main(argv=None):
         **{k: v for k, v in res.extras.items()
            if isinstance(v, (int, float, str))},
     }
+    plan = None
+    if args.artifact_dir:
+        edges = (None if args.no_plan else
+                 np.memmap(args.input, dtype=np.uint32,
+                           mode="r").reshape(-1, 2))
+        art = PartitionArtifact.save(
+            args.artifact_dir, res, num_vertices=stream.num_vertices,
+            num_edges=stream.num_edges, edges=edges,
+            pair_cap_quantile=args.pair_cap_quantile,
+            graph_path=args.input)
+        report["artifact_dir"] = args.artifact_dir
+        if art.has_halo_plan():
+            plan = art.halo_plan()
+            report["b_cap"] = plan.b_cap
     if args.plan_json:
-        manifest = _partition_manifest(args, res, stream)
+        # reuse the plan computed for the artifact (same quantile) rather
+        # than running the O(|E|) planning core a second time
+        manifest = _partition_manifest(args, res, stream, plan, out_path)
         with open(args.plan_json, "w") as f:
             json.dump(manifest, f, indent=2)
         report["plan_json"] = args.plan_json
@@ -81,21 +129,28 @@ def main(argv=None):
             print(f"{k:24s} {v}")
 
 
-def _partition_manifest(args, res, stream) -> dict:
+def _partition_manifest(args, res, stream, plan=None,
+                        out_path=None) -> dict:
     """DGL partition-book shape: one JSON describing every part, plus the
     halo-plan capacity envelope the SPMD runtime allocates from."""
-    from repro.dist.partitioned_gnn import plan_capacities
+    from repro.dist.partitioned_gnn import (capacities_from_plan,
+                                            plan_capacities)
 
-    edges = np.memmap(args.input, dtype=np.uint32, mode="r").reshape(-1, 2)
-    caps = plan_capacities(edges, np.asarray(res.assignment),
-                           stream.num_vertices, args.k)
+    if plan is not None:
+        caps = capacities_from_plan(plan)
+    else:
+        edges = np.memmap(args.input, dtype=np.uint32,
+                          mode="r").reshape(-1, 2)
+        caps = plan_capacities(edges, np.asarray(res.assignment),
+                               stream.num_vertices, args.k,
+                               args.pair_cap_quantile)
     return {
         "graph_name": args.input,
         "part_method": res.name,
         "num_parts": args.k,
         "num_nodes": stream.num_vertices,
         "num_edges": stream.num_edges,
-        "assignment_path": args.out,
+        "assignment_path": out_path if out_path is not None else args.out,
         "replication_factor": caps["replication_factor"],
         "halo_plan": {kk: caps[kk] for kk in
                       ("v_cap", "e_cap", "b_cap", "o_cap", "pair_mean",

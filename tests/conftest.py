@@ -21,6 +21,7 @@ except ImportError:                     # fall back to the deterministic stub
 _SLOW_SUBPROCESS_TESTS = {
     "test_spmd_train_step_matches_single_device",
     "test_partitioned_gin_matches_dense_reference",
+    "test_partitioned_gatedgcn_matches_dense_reference",
 }
 
 

@@ -63,6 +63,45 @@ def test_partition_cli_roundtrip(tmp_path):
     assert asg.min() >= 0 and asg.max() < 8
 
 
+def test_partition_cli_artifact_dir(tmp_path):
+    """End-to-end artifact path: CLI partitions into --artifact-dir, then
+    the artifact alone reproduces assignment + cached halo plan."""
+    from repro.core import PartitionArtifact, TwoPSLSpec
+    from repro.data import rmat_graph
+    from repro.dist.partitioned_gnn import plan_halo_exchange
+    edges = rmat_graph(9, edge_factor=8, seed=11)
+    path = str(tmp_path / "g.bin")
+    np.ascontiguousarray(edges, dtype=np.uint32).tofile(path)
+    art_dir = str(tmp_path / "artifact")
+    plan_json = str(tmp_path / "plan.json")
+    r = _run(["repro.launch.partition", "--input", path, "--k", "4",
+              "--algorithm", "2psl", "--chunk-size", "2048",
+              "--artifact-dir", art_dir, "--plan-json", plan_json,
+              "--pair-cap-quantile", "0.8", "--json"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    rep = json.loads(r.stdout)
+    assert rep["artifact_dir"] == art_dir
+
+    art = PartitionArtifact.load(art_dir)
+    assert isinstance(art.spec, TwoPSLSpec)
+    assert art.spec.chunk_size == 2048
+    asg = np.asarray(art.assignment)
+    assert len(asg) == len(edges) and asg.min() >= 0 and asg.max() < 4
+    plan = art.halo_plan()
+    V = int(edges.max()) + 1
+    fresh = plan_halo_exchange(edges, asg, V, 4, pair_cap_quantile=0.8)
+    assert rep["b_cap"] == plan.b_cap == fresh.b_cap
+    np.testing.assert_array_equal(plan.send_idx, fresh.send_idx)
+    np.testing.assert_array_equal(plan.ov_idx, fresh.ov_idx)
+    assert abs(plan.replication_factor - rep["replication_factor"]) < 1e-9
+    # the DGL manifest reuses the artifact's plan: same capped capacities
+    book = json.load(open(plan_json))
+    assert book["halo_plan"]["b_cap"] == plan.b_cap
+    assert book["halo_plan"]["o_cap"] == plan.o_cap
+    assert book["halo_plan"]["v_cap"] == plan.v_cap
+    assert abs(book["replication_factor"] - plan.replication_factor) < 1e-9
+
+
 def test_partition_cli_throttled(tmp_path):
     from repro.data import rmat_graph
     edges = rmat_graph(9, edge_factor=8, seed=6)

@@ -1,0 +1,189 @@
+"""Unified PartitionJob API: spec validation, registry, engine equivalence
+with the legacy ``run_*`` surface, and PartitionArtifact persistence."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (HDRFSpec, InMemoryEdgeStream, PARTITIONERS,
+                        PartitionArtifact, SPEC_REGISTRY, SpecError,
+                        StatelessSpec, TwoPSLSpec, run_partitioner,
+                        run_spec, spec_for, spec_from_dict)
+
+ALL_ALGOS = sorted(SPEC_REGISTRY)
+
+# chunk sizes small enough that the fixed seed graph spans several chunks
+_CHUNKS = {"2psl": 512, "2ps-hdrf": 512, "hdrf": 512, "greedy": 512,
+           "dbh": 1024, "grid": 1024, "random": 1024}
+
+
+@pytest.fixture(scope="module")
+def seed_graph():
+    rng = np.random.default_rng(42)
+    e = rng.integers(0, 300, (3000, 2)).astype(np.int32)
+    return e[e[:, 0] != e[:, 1]]
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_legacy_partitioner():
+    assert set(SPEC_REGISTRY) == set(PARTITIONERS)
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: TwoPSLSpec(alpha=0.5),
+    lambda: TwoPSLSpec(chunk_size=0),
+    lambda: TwoPSLSpec(cluster_passes=0),
+    lambda: TwoPSLSpec(max_vol_factor=-1.0),
+    lambda: TwoPSLSpec(scoring="nope"),
+    lambda: HDRFSpec(lam=0.0),
+    lambda: HDRFSpec(chunk_size=100),     # not a multiple of the scan width
+    lambda: StatelessSpec(variant="dbh"),
+    lambda: spec_for("metis"),
+])
+def test_spec_validation_errors(bad):
+    with pytest.raises(SpecError):
+        bad()
+
+
+def test_spec_dict_roundtrip_through_json():
+    for name in ALL_ALGOS:
+        spec = spec_for(name)
+        assert spec.algorithm == name
+        back = spec_from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert back == spec and type(back) is type(spec)
+
+
+def test_spec_from_dict_requires_algorithm():
+    with pytest.raises(SpecError):
+        spec_from_dict({"alpha": 1.05})
+    with pytest.raises(SpecError):
+        spec_from_dict({"algorithm": "metis"})
+
+
+def test_spec_is_frozen_and_replaceable():
+    spec = spec_for("2psl")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.alpha = 2.0
+    assert spec.replace(cluster_passes=3).cluster_passes == 3
+
+
+# ---------------------------------------------------------------------------
+# engine vs legacy shims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+def test_engine_matches_legacy_runner(name, seed_graph):
+    """Every partitioner runs through the one engine; the legacy kwarg
+    surface must map onto specs without changing a single assignment."""
+    k = 8
+    stream = InMemoryEdgeStream(seed_graph)
+    res_spec = run_spec(spec_for(name, chunk_size=_CHUNKS[name]), stream, k)
+    res_legacy = run_partitioner(name, stream, k, chunk_size=_CHUNKS[name])
+    np.testing.assert_array_equal(np.asarray(res_spec.assignment),
+                                  np.asarray(res_legacy.assignment))
+    assert res_spec.name == res_legacy.name
+    assert (res_spec.quality.replication_factor
+            == res_legacy.quality.replication_factor)
+    assert set(res_spec.timings) == set(res_legacy.timings)
+    assert res_legacy.spec == spec_for(name, chunk_size=_CHUNKS[name])
+
+
+def test_greedy_name_override_does_not_collide(seed_graph):
+    """Regression: run_greedy hard-passed name='Greedy', so a caller name=
+    raised TypeError through run_partitioner."""
+    stream = InMemoryEdgeStream(seed_graph)
+    res = run_partitioner("greedy", stream, 4, name="MyGreedy",
+                          chunk_size=512)
+    assert res.name == "MyGreedy"
+    assert run_partitioner("greedy", stream, 4,
+                           chunk_size=512).name == "Greedy"
+
+
+def test_engine_writes_assignment_memmap(tmp_path, seed_graph):
+    stream = InMemoryEdgeStream(seed_graph)
+    out = str(tmp_path / "asg.bin")
+    res = run_spec(spec_for("dbh"), stream, 4, out_path=out)
+    mm = np.memmap(out, dtype=np.int32, mode="r")
+    np.testing.assert_array_equal(mm, np.asarray(res.assignment))
+
+
+# ---------------------------------------------------------------------------
+# artifacts
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_bit_identical(tmp_path, seed_graph):
+    from repro.dist.partitioned_gnn import plan_halo_exchange
+    k = 4
+    stream = InMemoryEdgeStream(seed_graph)
+    spec = spec_for("2psl", chunk_size=512)
+    res = run_spec(spec, stream, k)
+    d = str(tmp_path / "art")
+    PartitionArtifact.save(d, res, num_vertices=stream.num_vertices,
+                           num_edges=stream.num_edges, edges=seed_graph)
+
+    art = PartitionArtifact.load(d)
+    np.testing.assert_array_equal(np.asarray(art.assignment),
+                                  np.asarray(res.assignment))
+    assert art.assignment.dtype == np.int32
+    assert art.spec == spec
+    assert art.k == k
+    assert art.num_edges == stream.num_edges
+    assert art.num_vertices == stream.num_vertices
+    assert abs(art.manifest["replication_factor"]
+               - res.quality.replication_factor) < 1e-12
+
+    # cached plan == freshly planned, field for field, bit for bit
+    fresh = plan_halo_exchange(seed_graph, np.asarray(res.assignment),
+                               stream.num_vertices, k)
+    cached = art.halo_plan()
+    for f in dataclasses.fields(fresh):
+        a, b = getattr(cached, f.name), getattr(fresh, f.name)
+        if isinstance(b, np.ndarray):
+            assert a.dtype == b.dtype, f.name
+            np.testing.assert_array_equal(a, b, err_msg=f.name)
+        else:
+            assert a == b, f.name
+
+
+def test_artifact_plan_needs_no_graph(tmp_path, seed_graph):
+    """ROADMAP 'plan caching': the reloaded HaloPlan must come from the
+    artifact alone — the edge stream is gone."""
+    import os
+    stream = InMemoryEdgeStream(seed_graph)
+    res = run_spec(spec_for("random"), stream, 4)
+    d = str(tmp_path / "art")
+    PartitionArtifact.save(d, res, num_vertices=stream.num_vertices,
+                           num_edges=stream.num_edges, edges=seed_graph)
+    del seed_graph, stream, res
+    art = PartitionArtifact.load(d)
+    plan = art.halo_plan()
+    assert plan.k == 4 and plan.edge_mask.sum() == art.num_edges
+    assert sorted(os.listdir(d)) == ["assignment.bin", "halo_plan.npz",
+                                     "manifest.json"]
+
+
+def test_artifact_without_plan(tmp_path, seed_graph):
+    stream = InMemoryEdgeStream(seed_graph)
+    res = run_spec(spec_for("grid"), stream, 4)
+    d = str(tmp_path / "art")
+    PartitionArtifact.save(d, res, num_vertices=stream.num_vertices,
+                           num_edges=stream.num_edges)
+    art = PartitionArtifact.load(d)
+    assert not art.has_halo_plan()
+    assert art.manifest["halo_plan"] is None
+    with pytest.raises(FileNotFoundError):
+        art.halo_plan()
+
+
+def test_artifact_save_requires_spec(tmp_path, seed_graph):
+    stream = InMemoryEdgeStream(seed_graph)
+    res = run_spec(spec_for("random"), stream, 4)
+    res.spec = None      # e.g. a result constructed by hand
+    with pytest.raises(ValueError):
+        PartitionArtifact.save(str(tmp_path / "a"), res,
+                               num_vertices=stream.num_vertices,
+                               num_edges=stream.num_edges)
