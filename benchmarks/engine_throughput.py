@@ -1,0 +1,299 @@
+"""Engine throughput: edges/sec across pipeline depths and scoring backends.
+
+Measures the pipelined streaming engine (``run_spec``) for 2PS-L, HDRF and
+DBH against a faithful re-implementation of the pre-pipeline engine — the
+fully synchronous per-chunk loop (host read -> device dispatch ->
+``np.asarray`` round trip -> writeback, nothing overlapped), fused device
+bits folds, and the per-chunk ``minlength=|V|`` host degree sweep.  Both
+sides run the same chunk kernels with the same hyper-parameters, so the
+measured ratio isolates the engine changes: prefetched reads, depth-N
+in-flight dispatch, writeback-stage host bits folds, the on-device degree
+pass, and (optionally) the Pallas scoring hot path.
+
+Emits ``BENCH_engine.json`` at the repo root — the start of the perf
+trajectory; subsequent engine PRs re-run this benchmark and append.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput [--fast] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (InMemoryEdgeStream, bitops, capacity,
+                        map_clusters_lpt, quality_from_bitmatrix, run_spec,
+                        streaming_clustering)
+from repro.core import partitioning as P
+
+from .common import BENCH_OVERRIDES, bench_spec, corpus
+
+ALGOS = ("2psl", "hdrf", "dbh")
+TARGET_SPEEDUP = 1.3
+SCHEMA_VERSION = 1
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+
+
+# ---------------------------------------------------------------------------
+# the pre-pipeline engine, reconstructed for an honest same-environment
+# baseline (same kernels, synchronous loop, legacy degree sweep)
+# ---------------------------------------------------------------------------
+
+def _legacy_degrees(stream, chunk_size):
+    """Pre-fix ``compute_degrees``: a fresh O(|V|) bincount per chunk."""
+    deg = np.zeros(stream.num_vertices, dtype=np.int64)
+    for chunk in stream.iter_chunks(chunk_size):
+        deg += np.bincount(chunk.reshape(-1), minlength=stream.num_vertices)
+    return deg.astype(np.int32)
+
+
+def _legacy_pad(chunk, chunk_size):
+    n = chunk.shape[0]
+    if n < chunk_size:
+        chunk = np.concatenate(
+            [chunk, np.zeros((chunk_size - n, 2), np.int32)], axis=0)
+    return jnp.asarray(chunk), jnp.arange(chunk_size) < n, n
+
+
+def _legacy_sweep(stream, chunk_size, assignment, chunk_fn, merge=False):
+    """The pre-pipeline per-pass loop: every chunk synchronizes on
+    ``np.asarray`` before the next is read."""
+    lo = 0
+    for chunk in stream.iter_chunks(chunk_size):
+        edges, valid, n = _legacy_pad(chunk, chunk_size)
+        asg = chunk_fn(edges, valid)
+        asg_np = np.asarray(asg[:n])
+        if merge:
+            sel = asg_np >= 0
+            assignment[lo:lo + n][sel] = asg_np[sel]
+        else:
+            assignment[lo:lo + n] = asg_np
+        lo += n
+
+
+def legacy_run(name, stream, k, **kw):
+    """Pre-PR ``run_spec`` semantics for the three benched algorithms."""
+    spec = bench_spec(name, **kw)
+    cs = spec.chunk_size
+    V, E = stream.num_vertices, stream.num_edges
+    assignment = np.full(E, -1, np.int32)
+
+    if name == "2psl":
+        cap = capacity(E, k, spec.alpha)
+        degrees = _legacy_degrees(stream, cs)
+        clus = streaming_clustering(stream, degrees, k=k,
+                                    max_vol_factor=spec.max_vol_factor,
+                                    passes=spec.cluster_passes,
+                                    chunk_size=cs)
+        c2p, _ = map_clusters_lpt(clus.vol, k)
+        st = {"bits": bitops.alloc_jnp(V, k),
+              "sizes": jnp.zeros((k,), jnp.int32),
+              "d": jnp.asarray(degrees, jnp.int32),
+              "vol": jnp.asarray(clus.vol, jnp.int32),
+              "v2c": jnp.asarray(clus.v2c, jnp.int32),
+              "c2p": jnp.asarray(c2p, jnp.int32)}
+
+        def prep(edges, valid):
+            st["bits"], st["sizes"], asg, _ = P._prepartition_chunk(
+                st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
+                edges, valid, k=k, cap=cap)
+            return asg
+
+        def score(edges, valid):
+            st["bits"], st["sizes"], asg = P._score_chunk(
+                st["bits"], st["sizes"], st["d"], st["vol"], st["v2c"],
+                st["c2p"], edges, valid, k=k, cap=cap)
+            return asg
+
+        _legacy_sweep(stream, cs, assignment, prep)
+        jax.block_until_ready(st)
+        _legacy_sweep(stream, cs, assignment, score, merge=True)
+    elif name == "hdrf":
+        cap = capacity(E, k, spec.alpha)
+        st = {"bits": bitops.alloc_jnp(V, k),
+              "sizes": jnp.zeros((k,), jnp.int32),
+              "dpart": jnp.zeros((V,), jnp.int32)}
+
+        def hdrf(edges, valid):
+            st["bits"], st["sizes"], st["dpart"], asg = P._hdrf_chunk(
+                st["bits"], st["sizes"], st["dpart"], edges, valid,
+                k=k, cap=cap, lam=spec.lam, use_cap=spec.use_cap,
+                degree_weighted=spec.degree_weighted)
+            return asg
+
+        _legacy_sweep(stream, cs, assignment, hdrf)
+    elif name == "dbh":
+        degrees = _legacy_degrees(stream, cs)
+        d = jnp.asarray(degrees, jnp.int32)
+        st = {"bits": bitops.alloc_jnp(V, k),
+              "sizes": jnp.zeros((k,), jnp.int32)}
+
+        def dbh(edges, valid):
+            asg = P._dbh_chunk(d, edges, valid, k=k)
+            st["bits"] = P._apply_bits(st["bits"], edges, asg)  # eager
+            st["sizes"] = st["sizes"].at[
+                jnp.where(asg >= 0, asg, k)].add(1, mode="drop")
+            return asg
+
+        _legacy_sweep(stream, cs, assignment, dbh)
+    else:
+        raise ValueError(name)
+
+    jax.block_until_ready(st)
+    return quality_from_bitmatrix(np.asarray(st["bits"]),
+                                  np.asarray(st["sizes"]), E), assignment
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+def _timeit(fn, repeats):
+    fn()                                           # warm-up / compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.mean(times))
+
+
+def _default_backends():
+    if jax.devices()[0].platform == "tpu":
+        return ["jnp", "pallas"]
+    return ["jnp"]       # interpret-mode Pallas is a parity path, not perf
+
+
+def run_benchmark(graphs: dict, *, depths, backends, repeats, k,
+                  algos=ALGOS):
+    results = []
+    for gname, stream in graphs.items():
+        E = stream.num_edges
+        for algo in algos:
+            base_secs = _timeit(lambda: legacy_run(algo, stream, k),
+                                repeats)
+            results.append({
+                "graph": gname, "algo": algo, "config": "legacy",
+                "seconds": round(base_secs, 4),
+                "edges_per_sec": round(E / base_secs, 1),
+            })
+            print(f"{gname:8s} {algo:5s} legacy            "
+                  f"{E / base_secs / 1e6:8.3f} Medges/s")
+            for backend in backends:
+                for depth in depths:
+                    spec_kw = dict(pipeline_depth=depth,
+                                   scoring_backend=backend)
+                    spec = bench_spec(algo, **spec_kw)
+                    secs = _timeit(
+                        lambda: run_spec(spec, stream, k), repeats)
+                    results.append({
+                        "graph": gname, "algo": algo,
+                        "config": f"depth={depth},backend={backend}",
+                        "pipeline_depth": depth,
+                        "scoring_backend": backend,
+                        "seconds": round(secs, 4),
+                        "edges_per_sec": round(E / secs, 1),
+                        "speedup_vs_legacy": round(base_secs / secs, 3),
+                    })
+                    print(f"{gname:8s} {algo:5s} d={depth} {backend:6s}    "
+                          f"{E / secs / 1e6:8.3f} Medges/s  "
+                          f"({base_secs / secs:.2f}x)")
+    return results
+
+
+def summarize(results):
+    best = {}                     # (graph, algo) -> best speedup
+    for r in results:
+        if "speedup_vs_legacy" not in r:
+            continue
+        key = (r["graph"], r["algo"])
+        best[key] = max(best.get(key, 0.0), r["speedup_vs_legacy"])
+    per_algo = {}
+    for (_, algo), sp in best.items():
+        per_algo.setdefault(algo, []).append(sp)
+    per_algo_geo = {a: round(float(np.exp(np.mean(np.log(v)))), 3)
+                    for a, v in per_algo.items()}
+    all_best = list(best.values())
+    geomean = (round(float(np.exp(np.mean(np.log(all_best)))), 3)
+               if all_best else 0.0)
+    return {
+        "per_algo_geomean_best_speedup": per_algo_geo,
+        "geomean_best_speedup": geomean,
+        "target_speedup": TARGET_SPEEDUP,
+        "meets_target": bool(geomean >= TARGET_SPEEDUP),
+    }
+
+
+def _smoke_graphs():
+    from repro.data import rmat_graph
+    return {"smoke-rmat": InMemoryEdgeStream(rmat_graph(9, edge_factor=8,
+                                                        seed=3))}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--depths", default="1,2,4",
+                    help="comma-separated pipeline depths")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated scoring backends "
+                         "(default: jnp, +pallas on TPU)")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--fast", action="store_true",
+                    help="first two corpus graphs only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic graph, 1 repeat (CI schema check)")
+    args = ap.parse_args(argv)
+
+    depths = [int(d) for d in args.depths.split(",")]
+    backends = (args.backends.split(",") if args.backends
+                else _default_backends())
+    if args.smoke:
+        graphs, repeats, k = _smoke_graphs(), 1, min(args.k, 8)
+    else:
+        graphs = corpus()
+        if args.fast:
+            graphs = {n: graphs[n] for n in list(graphs)[:2]}
+        repeats, k = args.repeats, args.k
+
+    results = run_benchmark(graphs, depths=depths, backends=backends,
+                            repeats=repeats, k=k)
+    doc = {
+        "benchmark": "engine_throughput",
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": int(time.time()),
+        "env": {
+            "platform": jax.devices()[0].platform,
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+        },
+        "k": k,
+        "chunk_sizes": {a: bench_spec(a).chunk_size for a in ALGOS},
+        "bench_overrides": {a: BENCH_OVERRIDES.get(a, {}) for a in ALGOS},
+        "graphs": {n: {"edges": s.num_edges, "vertices": s.num_vertices}
+                   for n, s in graphs.items()},
+        "results": results,
+        "summary": summarize(results),
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    s = doc["summary"]
+    print(f"\nwrote {args.out}")
+    print(f"geomean best speedup {s['geomean_best_speedup']}x "
+          f"(target {TARGET_SPEEDUP}x, "
+          f"{'MET' if s['meets_target'] else 'NOT met'})")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

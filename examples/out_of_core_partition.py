@@ -10,8 +10,6 @@ import os
 import tempfile
 import time
 
-import numpy as np
-
 from repro.core import (MemmapEdgeStream, PartitionArtifact, run_spec,
                         spec_for)
 from repro.data import rmat_graph
@@ -50,7 +48,7 @@ def main():
         art_dir = os.path.join(d, "artifact")
         PartitionArtifact.save(
             art_dir, res, num_vertices=stream.num_vertices,
-            num_edges=stream.num_edges, edges=np.asarray(edges),
+            num_edges=stream.num_edges, stream=stream,   # out-of-core plan
             graph_path=path)
         art = PartitionArtifact.load(art_dir)
         t0 = time.perf_counter()

@@ -50,5 +50,29 @@ print(f"CLI smoke OK: rf={report['replication_factor']:.3f} "
       f"b_cap={plan.b_cap}")
 PY
 
+# ---- bench smoke stage: engine throughput on a tiny graph, then validate
+# the BENCH_engine.json schema the perf trajectory is built from ----------
+python -m benchmarks.engine_throughput --smoke --depths 1,2 \
+    --out "$smoke_dir/BENCH_engine.json" > /dev/null
+python - "$smoke_dir" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1] + "/BENCH_engine.json"))
+assert doc["benchmark"] == "engine_throughput"
+assert doc["schema_version"] == 1
+assert doc["graphs"] and doc["results"]
+assert all(g["edges"] > 0 and g["vertices"] > 0
+           for g in doc["graphs"].values())
+legacy = [r for r in doc["results"] if r["config"] == "legacy"]
+piped = [r for r in doc["results"] if "speedup_vs_legacy" in r]
+assert legacy and piped, "need both legacy baseline and pipelined rows"
+for r in doc["results"]:
+    assert r["seconds"] > 0 and r["edges_per_sec"] > 0
+s = doc["summary"]
+assert {"geomean_best_speedup", "per_algo_geomean_best_speedup",
+        "target_speedup", "meets_target"} <= set(s)
+print(f"bench smoke OK: geomean {s['geomean_best_speedup']}x over the "
+      f"synchronous engine (tiny graph — schema check, not a perf gate)")
+PY
+
 # no exec: the EXIT trap must still fire to clean up the smoke dir
 python -m pytest -x -q "${marker[@]}" "$@"

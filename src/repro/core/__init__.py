@@ -9,7 +9,8 @@ from .clustering import (ClusteringResult, cluster_in_memory_scan,
                          cluster_sequential, default_max_vol,
                          streaming_clustering)
 from .engine import (PartitionRunResult, StreamingPartitioner, StreamPass,
-                     build_partitioner, run_spec)
+                     build_partitioner, compute_degrees_streaming, run_spec)
+from .scoring import resolve_scoring_backend
 from .mapping import map_clusters_lpt, map_clusters_lpt_jax
 from .metrics import (PartitionQuality, capacity, quality_from_assignment,
                       quality_from_bitmatrix)
@@ -36,5 +37,6 @@ __all__ = [
     "PartitionerSpec", "TwoPSLSpec", "HDRFSpec", "DBHSpec", "StatelessSpec",
     "SpecError", "SPEC_REGISTRY", "spec_for", "spec_from_dict",
     "StreamingPartitioner", "StreamPass", "build_partitioner", "run_spec",
-    "PartitionArtifact",
+    "PartitionArtifact", "compute_degrees_streaming",
+    "resolve_scoring_backend",
 ]

@@ -106,12 +106,13 @@ class PartitionArtifact:
              num_vertices: int, num_edges: int,
              spec: PartitionerSpec | None = None,
              plan=None, edges: np.ndarray | None = None,
-             pair_cap_quantile: float = 1.0,
+             stream=None, pair_cap_quantile: float = 1.0,
              graph_path: str | None = None) -> "PartitionArtifact":
         """Persist a run.  The halo plan is taken from ``plan`` if given,
-        else computed from ``edges`` (in-memory planning — see ROADMAP
-        "out-of-core planning"); with neither, the artifact carries only
-        assignment + manifest."""
+        else planned out-of-core from ``stream`` (an ``EdgeStream``,
+        chunked against the just-written assignment memmap — O(chunk+plan)
+        peak), else computed in-memory from ``edges``; with none of the
+        three, the artifact carries only assignment + manifest."""
         spec = spec if spec is not None else result.spec
         if spec is None:
             raise ValueError("no spec: pass spec= or run via run_spec")
@@ -126,7 +127,14 @@ class PartitionArtifact:
         else:
             np.asarray(asg, dtype=np.int32).tofile(asg_path)
 
-        if plan is None and edges is not None:
+        if plan is None and stream is not None:
+            from repro.dist.partitioned_gnn import plan_halo_exchange_stream
+            asg_mm = np.memmap(asg_path, dtype=np.int32, mode="r",
+                               shape=(num_edges,))
+            plan = plan_halo_exchange_stream(
+                stream, asg_mm, num_vertices, result.k,
+                pair_cap_quantile=pair_cap_quantile)
+        elif plan is None and edges is not None:
             from repro.dist.partitioned_gnn import plan_halo_exchange
             plan = plan_halo_exchange(edges, np.asarray(asg), num_vertices,
                                       result.k,

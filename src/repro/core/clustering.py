@@ -145,8 +145,12 @@ def streaming_clustering(stream: EdgeStream, degrees: np.ndarray | None = None,
                          *, k: int, max_vol: int | None = None,
                          max_vol_factor: float = 1.0, passes: int = 1,
                          chunk_size: int = 1 << 16,
-                         sub: int = 128) -> ClusteringResult:
-    """Out-of-core Phase 1: host streams chunks, device holds O(|V|) state."""
+                         sub: int = 128, readahead: int = 0) -> ClusteringResult:
+    """Out-of-core Phase 1: host streams chunks, device holds O(|V|) state.
+
+    ``readahead > 0`` reads chunks ahead on a background thread (the device
+    dispatch here is already asynchronous — nothing below synchronizes per
+    chunk — so prefetching the host read is the only missing overlap)."""
     if degrees is None:
         degrees = compute_degrees(stream, chunk_size)
     if max_vol is None:
@@ -161,15 +165,20 @@ def streaming_clustering(stream: EdgeStream, degrees: np.ndarray | None = None,
     vol = jnp.array(degrees, jnp.int32, copy=True)
 
     for _ in range(passes):
-        for chunk in stream.iter_chunks(chunk_size):
-            n = chunk.shape[0]
-            if n < chunk_size:  # pad ragged tail to keep one compiled shape
-                pad = np.zeros((chunk_size - n, 2), np.int32)
-                chunk = np.concatenate([chunk, pad], axis=0)
-            valid = jnp.arange(chunk_size) < n
-            v2c, vol, _ = _cluster_chunk_step(
-                v2c, vol, d, jnp.asarray(chunk), valid,
-                max_vol=int(max_vol), sub=sub)
+        it = stream.iter_chunks_prefetch(chunk_size, readahead)
+        try:
+            for chunk in it:
+                n = chunk.shape[0]
+                if n < chunk_size:  # pad tail to keep one compiled shape
+                    pad = np.zeros((chunk_size - n, 2), np.int32)
+                    chunk = np.concatenate([chunk, pad], axis=0)
+                valid = jnp.arange(chunk_size) < n
+                v2c, vol, _ = _cluster_chunk_step(
+                    v2c, vol, d, jnp.asarray(chunk), valid,
+                    max_vol=int(max_vol), sub=sub)
+        finally:
+            if hasattr(it, "close"):
+                it.close()          # joins the prefetch thread on error
 
     return ClusteringResult(v2c=np.asarray(v2c), vol=np.asarray(vol),
                             degrees=np.asarray(degrees, np.int32),

@@ -6,11 +6,49 @@ allocation and writing, merge-vs-overwrite bookkeeping for multi-pass
 algorithms, per-pass admission counting (the pre-partition ratio), phase
 timing, device synchronization, and simulated-IO accounting.
 
+Pipeline model
+--------------
+
+Each pass over the edge stream is a three-stage pipeline with up to
+``spec.pipeline_depth`` chunks in flight:
+
+    read (prefetch thread)  ->  device dispatch (async)  ->  writeback (host)
+
+* A background thread pulls chunks from ``EdgeStream.iter_chunks`` into a
+  bounded queue (``stream.iter_chunks_prefetch``), so disk/decode IO for
+  chunk k+1 overlaps everything downstream of chunk k.
+* The main thread pads + dispatches ``chunk_fn`` without synchronizing:
+  per-chunk assignments stay *device* arrays in an in-flight deque, and
+  the algorithm state (bits/sizes/degrees) is donated from one chunk call
+  to the next, so the device runs ahead of the host.
+* Host materialization (``np.asarray``) + assignment memmap writes + any
+  host-side replication fold happen in the writeback stage, which only
+  runs once the deque exceeds the pipeline depth — i.e. chunk k's
+  writeback overlaps chunk k+1's read and dispatch.
+
+Depth 1 degenerates to the fully synchronous engine (dispatch, then
+immediately materialize).  **Any depth produces bit-identical
+assignments**: the chunk kernels execute in stream order with identical
+inputs at every depth — pipelining only defers when results are copied
+off-device, never what is computed.
+
+Passes that *read* replication state (2PS-L scoring, HDRF) fold the bit
+matrix on-device inside their chunk kernels — that fold is a sequential
+dependency and belongs on the critical path.  Passes that only *write* it
+(pre-partitioning, the stateless hashing family) skip the device
+scatter-OR entirely and fold replication on the host in the writeback
+stage (``StreamPass.host_fold``), off the critical path; a pass that needs
+the accumulated bits later uploads them once via ``StreamPass.setup``.
+The upfront degree pass runs on-device through the same pipeline
+(``compute_degrees_streaming``) instead of a synchronous host bincount
+sweep.
+
 Each algorithm plugs in as a ``StreamingPartitioner`` state machine:
 
     init_state(stream, k, timer, degrees)  -> device state pytree
     passes()                               -> [StreamPass(phase, chunk_fn,
-                                                          merge), ...]
+                                                          merge, setup,
+                                                          host_fold), ...]
     chunk_fn(state, padded_chunk)          -> (state, (C,) assignment)
     finalize(state, pass_counts)           -> (bits, sizes, extras)
 
@@ -22,10 +60,12 @@ O(|V|*k) bits regardless of |E| — the paper's out-of-core property.
 """
 from __future__ import annotations
 
+import functools
 import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +75,10 @@ from . import bitops, partitioning as P
 from .clustering import streaming_clustering
 from .mapping import map_clusters_lpt
 from .metrics import PartitionQuality, capacity, quality_from_bitmatrix
+from .scoring import resolve_scoring_backend
 from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, StatelessSpec,
                     TwoPSLSpec)
-from .stream import EdgeStream, compute_degrees
+from .stream import EdgeStream
 
 
 @dataclass
@@ -76,6 +117,35 @@ def _alloc_assignment(num_edges: int, out_path: str | None):
     return mm
 
 
+# ---------------------------------------------------------------------------
+# on-device degree pass (pipelined)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _degree_fold(deg, edges, valid):
+    vv = jnp.concatenate([edges[:, 0], edges[:, 1]])
+    mm = jnp.concatenate([valid, valid])
+    return deg.at[jnp.where(mm, vv, deg.shape[0])].add(1, mode="drop")
+
+
+def compute_degrees_streaming(stream: EdgeStream, chunk_size: int, *,
+                              readahead: int = 1) -> np.ndarray:
+    """The paper's upfront degree pass, run through the engine's pipeline:
+    the host only prefetches + pads chunks while an O(|V|) device counter
+    absorbs scatter-adds asynchronously.  Bit-identical to the host
+    ``stream.compute_degrees`` sweep."""
+    deg = jnp.zeros((stream.num_vertices,), jnp.int32)
+    it = stream.iter_chunks_prefetch(chunk_size, readahead)
+    try:
+        for chunk in it:
+            pc = P.pad_chunk(chunk, chunk_size)
+            deg = _degree_fold(deg, pc.edges, pc.valid)
+    finally:
+        if hasattr(it, "close"):
+            it.close()              # joins the prefetch thread on error
+    return np.asarray(deg)
+
+
 @dataclass
 class StreamPass:
     """One sequential sweep over the edge stream."""
@@ -83,6 +153,11 @@ class StreamPass:
     chunk_fn: Callable[[dict, P.PaddedChunk], tuple]  # (state, pc) ->
     #                                                   (state, (C,) asg)
     merge: bool = False   # True: only rows with asg >= 0 overwrite
+    #: run once before the sweep (e.g. upload host-folded bits to device)
+    setup: Callable[[dict], dict] | None = None
+    #: writeback-stage hook: (chunk (n,2) np, asg (n,) np) -> None.  Runs
+    #: off the critical path, overlapped with later chunks' dispatch.
+    host_fold: Callable[[np.ndarray, np.ndarray], None] | None = None
 
 
 class StreamingPartitioner:
@@ -112,24 +187,29 @@ class _TwoPSLPartitioner(StreamingPartitioner):
     def __init__(self, spec: TwoPSLSpec):
         self.spec = spec
         self.display_name = spec.display_name
+        self.backend = resolve_scoring_backend(spec.scoring_backend)
 
     def init_state(self, stream, k, timer, degrees):
         sp = self.spec
         self.k, self.cap = k, capacity(stream.num_edges, k, sp.alpha)
         self._num_edges = stream.num_edges
         if degrees is None:
-            degrees = compute_degrees(stream, sp.chunk_size)
+            degrees = compute_degrees_streaming(
+                stream, sp.chunk_size, readahead=sp.pipeline_depth - 1)
         timer.lap("degrees")
         clus = streaming_clustering(stream, degrees, k=k,
                                     max_vol_factor=sp.max_vol_factor,
                                     passes=sp.cluster_passes,
-                                    chunk_size=sp.chunk_size)
+                                    chunk_size=sp.chunk_size,
+                                    readahead=sp.pipeline_depth - 1)
         timer.lap("clustering")
         c2p, part_vol = map_clusters_lpt(clus.vol, k)
         timer.lap("mapping")
         self._clus, self._part_vol = clus, part_vol
+        # pre-partitioning only WRITES replication state -> fold it on the
+        # host in the writeback stage; the scoring pass uploads it once.
+        self._bits_np = bitops.alloc_np(stream.num_vertices, k)
         return {
-            "bits": bitops.alloc_jnp(stream.num_vertices, k),
             "sizes": jnp.zeros((k,), jnp.int32),
             "d": jnp.asarray(degrees, jnp.int32),
             "vol": jnp.asarray(clus.vol, jnp.int32),
@@ -138,25 +218,37 @@ class _TwoPSLPartitioner(StreamingPartitioner):
         }
 
     def passes(self):
-        return [StreamPass("prepartition", self._prepartition),
-                StreamPass("scoring", self._score, merge=True)]
+        return [StreamPass("prepartition", self._prepartition,
+                           host_fold=self._fold_bits_host),
+                StreamPass("scoring", self._score, merge=True,
+                           setup=self._upload_bits)]
 
     def _prepartition(self, st, pc):
-        bits, sizes, asg, _ = P._prepartition_chunk(
-            st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
+        sizes, asg, _ = P._prepartition_core(
+            st["sizes"], st["d"], st["v2c"], st["c2p"],
             pc.edges, pc.valid, k=self.k, cap=self.cap)
-        return {**st, "bits": bits, "sizes": sizes}, asg
+        return {**st, "sizes": sizes}, asg
+
+    def _fold_bits_host(self, chunk, asg):
+        m = asg >= 0
+        p = asg[m]
+        bitops.set_np(self._bits_np, chunk[m, 0], p)
+        bitops.set_np(self._bits_np, chunk[m, 1], p)
+
+    def _upload_bits(self, st):
+        return {**st, "bits": jnp.asarray(self._bits_np)}
 
     def _score(self, st, pc):
         if self.spec.scoring == "2psl":
             bits, sizes, asg = P._score_chunk(
                 st["bits"], st["sizes"], st["d"], st["vol"], st["v2c"],
-                st["c2p"], pc.edges, pc.valid, k=self.k, cap=self.cap)
+                st["c2p"], pc.edges, pc.valid, k=self.k, cap=self.cap,
+                backend=self.backend)
         else:
             bits, sizes, asg = P._hdrf_remaining_chunk(
                 st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
                 pc.edges, pc.valid, k=self.k, cap=self.cap,
-                lam=self.spec.hdrf_lambda)
+                lam=self.spec.hdrf_lambda, backend=self.backend)
         return {**st, "bits": bits, "sizes": sizes}, asg
 
     def finalize(self, state, pass_counts):
@@ -179,6 +271,7 @@ class _HDRFPartitioner(StreamingPartitioner):
     def __init__(self, spec: HDRFSpec):
         self.spec = spec
         self.display_name = spec.display_name
+        self.backend = resolve_scoring_backend(spec.scoring_backend)
 
     def init_state(self, stream, k, timer, degrees):
         self.k = k
@@ -198,7 +291,7 @@ class _HDRFPartitioner(StreamingPartitioner):
         bits, sizes, dpart, asg = P._hdrf_chunk(
             st["bits"], st["sizes"], st["dpart"], pc.edges, pc.valid,
             k=self.k, cap=self.cap, lam=sp.lam, use_cap=sp.use_cap,
-            degree_weighted=sp.degree_weighted)
+            degree_weighted=sp.degree_weighted, backend=self.backend)
         return {"bits": bits, "sizes": sizes, "dpart": dpart}, asg
 
 
@@ -207,28 +300,38 @@ class _HDRFPartitioner(StreamingPartitioner):
 # ---------------------------------------------------------------------------
 
 class _HashPartitioner(StreamingPartitioner):
-    """Shared driver for the per-edge hash partitioners: the chunk kernel
-    is pure, the engine pass just folds the result into bits/sizes."""
+    """Shared driver for the per-edge hash partitioners: the chunk kernel is
+    a pure map, so the device never folds replication state at all — bits
+    and sizes accumulate on the host in the writeback stage, fully
+    overlapped with the hashing of later chunks."""
 
     phase = "hashing"
 
     def init_state(self, stream, k, timer, degrees):
         self.k = k
-        return {"bits": bitops.alloc_jnp(stream.num_vertices, k),
-                "sizes": jnp.zeros((k,), jnp.int32)}
+        self._bits_np = bitops.alloc_np(stream.num_vertices, k)
+        self._sizes_np = np.zeros((k,), np.int64)
+        return {}
 
     def passes(self):
-        return [StreamPass(self.phase, self._chunk)]
+        return [StreamPass(self.phase, self._chunk,
+                           host_fold=self._fold_host)]
 
     def _hash_chunk(self, st, pc):
         raise NotImplementedError
 
     def _chunk(self, st, pc):
-        asg = self._hash_chunk(st, pc)
-        bits = P._apply_bits(st["bits"], pc.edges, asg)
-        sizes = st["sizes"].at[jnp.where(asg >= 0, asg, self.k)].add(
-            1, mode="drop")
-        return {**st, "bits": bits, "sizes": sizes}, asg
+        return st, self._hash_chunk(st, pc)
+
+    def _fold_host(self, chunk, asg):
+        m = asg >= 0
+        p = asg[m]
+        bitops.set_np(self._bits_np, chunk[m, 0], p)
+        bitops.set_np(self._bits_np, chunk[m, 1], p)
+        self._sizes_np += np.bincount(p, minlength=self.k)
+
+    def finalize(self, state, pass_counts):
+        return self._bits_np, self._sizes_np, {}
 
 
 class _DBHPartitioner(_HashPartitioner):
@@ -238,7 +341,9 @@ class _DBHPartitioner(_HashPartitioner):
 
     def init_state(self, stream, k, timer, degrees):
         if degrees is None:
-            degrees = compute_degrees(stream, self.spec.chunk_size)
+            degrees = compute_degrees_streaming(
+                stream, self.spec.chunk_size,
+                readahead=self.spec.pipeline_depth - 1)
         st = super().init_state(stream, k, timer, degrees)
         st["d"] = jnp.asarray(degrees, jnp.int32)
         timer.lap("degrees")
@@ -295,7 +400,8 @@ def build_partitioner(spec: PartitionerSpec) -> StreamingPartitioner:
 def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
              out_path: str | None = None,
              degrees: np.ndarray | None = None) -> PartitionRunResult:
-    """Execute a PartitionerSpec over an edge stream.
+    """Execute a PartitionerSpec over an edge stream (see module docstring
+    for the pipeline model).
 
     ``out_path`` writes the assignment as an int32 memmap instead of an
     in-memory array; ``degrees`` short-circuits the upfront degree pass for
@@ -305,23 +411,45 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
     timer = _Timer()
     state = part.init_state(stream, k, timer, degrees)
     assignment = _alloc_assignment(stream.num_edges, out_path)
+    depth = spec.pipeline_depth
 
     pass_counts: dict[str, int] = {}
     for sp in part.passes():
-        lo = 0
+        if sp.setup is not None:
+            state = sp.setup(state)
+        inflight: deque = deque()   # (lo, chunk_np, n, device asg)
         assigned = 0
-        for chunk in stream.iter_chunks(spec.chunk_size):
-            pc = P.pad_chunk(chunk, spec.chunk_size)
-            state, asg = sp.chunk_fn(state, pc)
-            asg_np = np.asarray(asg[:pc.n])
+        lo = 0
+
+        def _writeback():
+            nonlocal assigned
+            w_lo, w_chunk, w_n, w_asg = inflight.popleft()
+            asg_np = np.asarray(w_asg)[:w_n]
             if sp.merge:
                 sel = asg_np >= 0
-                assignment[lo:lo + pc.n][sel] = asg_np[sel]
+                assignment[w_lo:w_lo + w_n][sel] = asg_np[sel]
                 assigned += int(sel.sum())
             else:
-                assignment[lo:lo + pc.n] = asg_np
+                assignment[w_lo:w_lo + w_n] = asg_np
                 assigned += int((asg_np >= 0).sum())
-            lo += pc.n
+            if sp.host_fold is not None:
+                sp.host_fold(w_chunk, asg_np)
+
+        it = stream.iter_chunks_prefetch(spec.chunk_size,
+                                         readahead=depth - 1)
+        try:
+            for chunk in it:
+                pc = P.pad_chunk(chunk, spec.chunk_size)
+                state, asg = sp.chunk_fn(state, pc)
+                inflight.append((lo, chunk, pc.n, asg))
+                lo += pc.n
+                while len(inflight) >= depth:
+                    _writeback()
+        finally:
+            if hasattr(it, "close"):
+                it.close()          # joins the prefetch thread on error
+        while inflight:
+            _writeback()
         jax.block_until_ready(state)
         timer.lap(sp.phase)
         pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + assigned

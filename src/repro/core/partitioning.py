@@ -100,10 +100,17 @@ def _apply_bits(bits, edges, assignment):
 
 @functools.partial(jax.jit,
                    static_argnames=("k",),
-                   donate_argnums=(0, 1))
-def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
+                   donate_argnums=(0,))
+def _prepartition_core(sizes, d, v2c, c2p, edges, valid, *, k, cap):
     """Assign every edge whose endpoints share a cluster (or whose clusters
-    share a partition) to that partition; overflow -> hash -> least-loaded."""
+    share a partition) to that partition; overflow -> hash -> least-loaded.
+
+    Deliberately does NOT fold the replication bit matrix: pre-partitioning
+    never *reads* ``bits`` (assignments depend only on clusters + sizes), so
+    the streaming engine folds replication on the host in the pipeline's
+    writeback stage instead of paying the sort-based device scatter-OR on
+    the critical path.  Use ``_prepartition_chunk`` for the fused
+    read-after-write variant (incremental updates)."""
     u, v = edges[:, 0], edges[:, 1]
     cu, cv = v2c[u], v2c[v]
     pu, pv = c2p[cu], c2p[cv]
@@ -124,8 +131,20 @@ def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
     still = over & ~ok2
     assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
 
-    bits = _apply_bits(bits, edges, assignment)
     remaining = valid & ~eligible
+    return sizes, assignment, remaining
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k",),
+                   donate_argnums=(0, 1))
+def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
+    """Fused pre-partitioning: ``_prepartition_core`` + device bits fold.
+    For consumers that read the replication state immediately after (the
+    incremental re-partitioner scores the same chunk next)."""
+    sizes, assignment, remaining = _prepartition_core(
+        sizes, d, v2c, c2p, edges, valid, k=k, cap=cap)
+    bits = _apply_bits(bits, edges, assignment)
     return bits, sizes, assignment, remaining
 
 
@@ -134,11 +153,18 @@ def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit,
-                   static_argnames=("k",),
+                   static_argnames=("k", "backend"),
                    donate_argnums=(0, 1))
-def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap):
+def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap,
+                 backend: str = "jnp"):
     """Score each *remaining* edge against exactly two candidate partitions
-    (the partitions of its endpoints' clusters) — the paper's O(|E|) claim."""
+    (the partitions of its endpoints' clusters) — the paper's O(|E|) claim.
+
+    ``backend='pallas'`` routes the two-candidate score through the fused
+    ``repro.kernels.edge_score`` VMEM kernel (one pass over the gathered
+    operands instead of XLA materializing each score term); everything
+    around it — gathers, capacity admission, overflow chain, bits fold —
+    is shared."""
     u, v = edges[:, 0], edges[:, 1]
     cu, cv = v2c[u], v2c[v]
     pu, pv = c2p[cu], c2p[cv]
@@ -148,15 +174,23 @@ def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap):
     du, dv = d[u], d[v]
     vol_u, vol_v = vol[cu], vol[cv]
 
-    def score_for(p):
-        rep_u = bitops.get_jnp(bits, u, p)
-        rep_v = bitops.get_jnp(bits, v, p)
-        return twopsl_score(du, dv, vol_u, vol_v, rep_u, rep_v,
-                            pu == p, pv == p)
+    if backend == "pallas":
+        from repro.kernels.edge_score import edge_score_choose
+        chosen, _ = edge_score_choose(
+            du, dv, vol_u, vol_v,
+            bitops.get_jnp(bits, u, pu), bitops.get_jnp(bits, v, pu),
+            bitops.get_jnp(bits, u, pv), bitops.get_jnp(bits, v, pv),
+            pu, pv)
+    else:
+        def score_for(p):
+            rep_u = bitops.get_jnp(bits, u, p)
+            rep_v = bitops.get_jnp(bits, v, p)
+            return twopsl_score(du, dv, vol_u, vol_v, rep_u, rep_v,
+                                pu == p, pv == p)
 
-    s1 = score_for(pu)
-    s2 = score_for(pv)
-    chosen = jnp.where(s2 > s1, pv, pu)   # first candidate wins ties
+        s1 = score_for(pu)
+        s2 = score_for(pv)
+        chosen = jnp.where(s2 > s1, pv, pu)   # first candidate wins ties
 
     ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
     assignment = jnp.where(ok, chosen, jnp.int32(-1))
@@ -180,10 +214,11 @@ def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap):
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "lam", "use_cap", "sub",
-                                    "degree_weighted"),
+                                    "degree_weighted", "backend"),
                    donate_argnums=(0, 1, 2))
 def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
-                sub: int = 64, degree_weighted: bool = True):
+                sub: int = 64, degree_weighted: bool = True,
+                backend: str = "jnp"):
     """HDRF: score EVERY partition for every edge — the O(|E|*k) cost the
     paper eliminates.  Uses HDRF's own streamed partial degrees.
 
@@ -191,12 +226,18 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
     balance term only works if partition sizes are near-fresh, so the
     micro-batch bounds the staleness (measured alpha stays ~1.0x like the
     sequential algorithm, vs >2x if a whole chunk reads one snapshot).
+
+    ``backend='pallas'`` evaluates the per-micro-batch k-way score/argmax
+    with the ``repro.kernels.hdrf_score`` lane-parallel kernel (only for
+    the degree-weighted variant — the kernel hard-codes HDRF's degree
+    preference; Greedy always uses the jnp path).
     """
     C = edges.shape[0]
     assert C % sub == 0
     edges_s = edges.reshape(C // sub, sub, 2)
     valid_s = valid.reshape(C // sub, sub)
     parts = jnp.arange(k, dtype=jnp.int32)
+    use_pallas = backend == "pallas" and degree_weighted
 
     def body(carry, inp):
         bits, sizes, dpart = carry
@@ -207,9 +248,13 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
         du, dv = dpart[u], dpart[v]
         rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
         rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
-        scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam,
-                            degree_weighted=degree_weighted)
-        chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        if use_pallas:
+            from repro.kernels.hdrf_score import hdrf_choose
+            chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam)
+        else:
+            scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam,
+                                degree_weighted=degree_weighted)
+            chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
         if use_cap:
             ok, sizes = _ranked_admit(chosen, m, sizes, cap, k)
             assignment = jnp.where(ok, chosen, jnp.int32(-1))
@@ -227,10 +272,10 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "lam"),
+                   static_argnames=("k", "lam", "backend"),
                    donate_argnums=(0, 1))
 def _hdrf_remaining_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap,
-                          lam):
+                          lam, backend: str = "jnp"):
     """2PS-HDRF step 3: HDRF scoring over ALL k partitions for the edges the
     pre-partitioning pass left over (true degrees known from Phase 1)."""
     u, v = edges[:, 0], edges[:, 1]
@@ -242,8 +287,12 @@ def _hdrf_remaining_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap,
     parts = jnp.arange(k, dtype=jnp.int32)
     rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
     rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
-    scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam)
-    chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    if backend == "pallas":
+        from repro.kernels.hdrf_score import hdrf_choose
+        chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam)
+    else:
+        scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam)
+        chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
 
     ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
     assignment = jnp.where(ok, chosen, jnp.int32(-1))
@@ -286,7 +335,7 @@ def _random_hash_chunk(edges, valid, *, k):
 
 
 # ---------------------------------------------------------------------------
-# chunk padding helper shared by the drivers in pipeline.py
+# chunk padding helper shared by the engine and the incremental updater
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -296,10 +345,20 @@ class PaddedChunk:
     n: int
 
 
+@functools.lru_cache(maxsize=32)
+def _valid_mask(chunk_size: int, n: int) -> jnp.ndarray:
+    """Cached device-resident validity mask.  Only two shapes occur per
+    (stream, chunk_size) pair — the all-valid body and the ragged tail — so
+    caching removes two device dispatches (arange + compare) per chunk from
+    the streaming hot loop.  The small maxsize bounds pinned device memory
+    to 32 * chunk_size bool elements process-wide."""
+    return jnp.asarray(np.arange(chunk_size) < n)
+
+
 def pad_chunk(chunk: np.ndarray, chunk_size: int) -> PaddedChunk:
     n = chunk.shape[0]
     if n < chunk_size:
         chunk = np.concatenate(
             [chunk, np.zeros((chunk_size - n, 2), np.int32)], axis=0)
     return PaddedChunk(edges=jnp.asarray(chunk),
-                       valid=jnp.arange(chunk_size) < n, n=n)
+                       valid=_valid_mask(chunk_size, n), n=n)

@@ -3,10 +3,35 @@
 These are the pure math shared by the core partitioner, the Pallas kernels'
 reference oracles, and the baselines.  Everything is expressed over already
 *gathered* per-edge quantities so it works identically under numpy and jnp.
+
+``resolve_scoring_backend`` maps a ``PartitionerSpec.scoring_backend``
+request onto what this host can actually execute: ``"pallas"`` routes the
+chunk kernels' score/argmax inner loop through the fused VMEM kernels in
+``repro.kernels.edge_score`` / ``repro.kernels.hdrf_score`` (compiled on
+TPU, interpret mode elsewhere), and silently degrades to ``"jnp"`` when the
+Pallas path cannot run in this jax build.
 """
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def resolve_scoring_backend(requested: str = "jnp") -> str:
+    """'pallas' if requested AND both scoring kernels pass their one-time
+    availability probe; 'jnp' otherwise."""
+    if requested != "pallas":
+        return "jnp"
+    try:
+        from repro.kernels.edge_score import pallas_ready as _edge_ready
+        from repro.kernels.hdrf_score import pallas_ready as _hdrf_ready
+        if _edge_ready() and _hdrf_ready():
+            return "pallas"
+    except Exception:  # pragma: no cover - depends on jax build
+        pass
+    return "jnp"
 
 
 def twopsl_score(du, dv, vol_cu, vol_cv, rep_u, rep_v, cu_on_p, cv_on_p):

@@ -31,12 +31,28 @@ def _check(cond: bool, msg: str):
 
 @dataclass(frozen=True)
 class PartitionerSpec:
-    """Base spec: balance slack + streaming chunk size, shared by all
-    algorithms.  Subclasses add algorithm hyper-parameters and must define
-    the ``algorithm`` registry key via the ``algorithm`` property."""
+    """Base spec: balance slack + streaming chunk size + engine pipelining,
+    shared by all algorithms.  Subclasses add algorithm hyper-parameters and
+    must define the ``algorithm`` registry key via the ``algorithm``
+    property.
+
+    ``pipeline_depth`` is the engine's in-flight chunk budget: chunk k+1's
+    read + device dispatch overlap chunk k's host materialization and
+    memmap writeback.  Depth 1 is the fully synchronous engine; any depth
+    produces bit-identical assignments (the chunk kernels always execute in
+    stream order — only writeback is deferred).
+
+    ``scoring_backend`` selects the implementation of the scoring hot path:
+    ``"jnp"`` (XLA-fused jnp, the default) or ``"pallas"`` (the fused
+    VMEM-resident kernels in ``repro.kernels.edge_score`` /
+    ``repro.kernels.hdrf_score``; falls back to jnp automatically where
+    Pallas cannot run).
+    """
 
     alpha: float = 1.05
     chunk_size: int = 1 << 16
+    pipeline_depth: int = 2
+    scoring_backend: str = "jnp"   # 'jnp' | 'pallas'
 
     def __post_init__(self):
         self.validate()
@@ -47,6 +63,12 @@ class PartitionerSpec:
                f"alpha must be >= 1.0 (got {self.alpha!r})")
         _check(isinstance(self.chunk_size, int) and self.chunk_size > 0,
                f"chunk_size must be a positive int (got {self.chunk_size!r})")
+        _check(isinstance(self.pipeline_depth, int) and self.pipeline_depth >= 1,
+               f"pipeline_depth must be an int >= 1 "
+               f"(got {self.pipeline_depth!r})")
+        _check(self.scoring_backend in ("jnp", "pallas"),
+               f"scoring_backend must be 'jnp' or 'pallas' "
+               f"(got {self.scoring_backend!r})")
 
     # -- identity --------------------------------------------------------
     @property

@@ -38,7 +38,8 @@ from .partitioned_gnn import (HaloPlan, capacities_from_plan,
                               make_partitioned_gnn_step,
                               partitioned_gatedgcn_loss,
                               partitioned_gin_loss, plan_capacities,
-                              plan_halo_exchange)
+                              plan_capacities_stream, plan_halo_exchange,
+                              plan_halo_exchange_stream)
 
 __all__ = [
     "best_spec", "constrain", "fsdp_axes", "gnn_batch_specs",
@@ -48,5 +49,6 @@ __all__ = [
     "make_partitioned_gatedgcn_step",
     "make_partitioned_gin_step", "make_partitioned_gnn_step",
     "partitioned_gatedgcn_loss", "partitioned_gin_loss", "plan_capacities",
-    "plan_halo_exchange",
+    "plan_capacities_stream", "plan_halo_exchange",
+    "plan_halo_exchange_stream",
 ]

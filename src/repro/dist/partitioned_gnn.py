@@ -49,14 +49,41 @@ from repro.training import make_train_step
 
 
 # ---------------------------------------------------------------------------
-# planning core (pure numpy, vectorized)
+# planning core (pure numpy, vectorized, chunk-at-a-time)
+#
+# Every pass over the graph is expressed against an (edges, assignment)
+# chunk iterator, so the same core serves both the in-memory path (one big
+# chunk) and the out-of-core path (``plan_halo_exchange_stream``: the edge
+# stream re-iterated chunk by chunk against the assignment memmap — peak
+# memory is O(chunk + plan), never O(|E|)).
 # ---------------------------------------------------------------------------
 
-def _incidence(edges: np.ndarray, assignment: np.ndarray, V: int):
-    """Unique (partition, vertex) pairs, sorted by (partition, vertex)."""
-    key = np.unique(np.concatenate([assignment * V + edges[:, 0],
-                                    assignment * V + edges[:, 1]]))
-    return key // V, key % V            # parts, verts (replica incidences)
+def _inmemory_chunks(edges: np.ndarray, assignment: np.ndarray):
+    """Chunk factory for already-resident arrays: one chunk."""
+    edges = np.ascontiguousarray(edges)[:, :2].astype(np.int64)
+    assignment = np.asarray(assignment).astype(np.int64)
+    if len(edges) != len(assignment):
+        raise ValueError("edges / assignment length mismatch")
+
+    def chunks():
+        yield edges, assignment
+    return chunks
+
+
+def _stream_chunks(stream, assignment: np.ndarray, chunk_size: int):
+    """Chunk factory over an ``EdgeStream`` + assignment array/memmap,
+    aligned by stream offset.  Re-iterable (planning needs two sweeps)."""
+    if stream.num_edges != len(assignment):
+        raise ValueError("stream / assignment length mismatch")
+
+    def chunks():
+        lo = 0
+        for chunk in stream.iter_chunks(chunk_size):
+            n = chunk.shape[0]
+            yield (np.ascontiguousarray(chunk)[:, :2].astype(np.int64),
+                   np.asarray(assignment[lo:lo + n]).astype(np.int64))
+            lo += n
+    return chunks
 
 
 def _replica_events(verts: np.ndarray, parts: np.ndarray, k: int, V: int):
@@ -91,15 +118,31 @@ def _lane_ranks(ev_pq: np.ndarray) -> np.ndarray:
     return idx - np.maximum.accumulate(np.where(is_start, idx, 0))
 
 
-def _plan_core(edges, assignment, V, k, pair_cap_quantile):
-    edges = np.ascontiguousarray(edges)[:, :2].astype(np.int64)
-    assignment = np.asarray(assignment).astype(np.int64)
-    if len(edges) != len(assignment):
-        raise ValueError("edges / assignment length mismatch")
+def _plan_core(chunks, V, k, pair_cap_quantile):
+    """First sweep: replica incidence + per-partition edge counts, folded
+    chunk by chunk (``chunks`` is a chunk factory, see above).
 
-    parts, verts = _incidence(edges, assignment, V)
+    Per-chunk unique keys are buffered and merged geometrically (only when
+    the buffer outgrows the merged set) instead of union1d per chunk —
+    re-sorting the full incidence for every chunk would make the sweep
+    O(chunks * |incidence|); this keeps it O(|incidence| log chunks) with
+    peak memory a small multiple of the incidence size."""
+    merged = np.empty(0, np.int64)
+    pending, pending_n = [], 0
+    edge_counts = np.zeros(k, np.int64)
+    for e, a in chunks():
+        ck = np.unique(np.concatenate([a * V + e[:, 0], a * V + e[:, 1]]))
+        pending.append(ck)
+        pending_n += len(ck)
+        if pending_n >= max(len(merged), 1 << 22):
+            merged = np.unique(np.concatenate([merged, *pending]))
+            pending, pending_n = [], 0
+        edge_counts += np.bincount(a, minlength=k)
+    if pending:
+        merged = np.unique(np.concatenate([merged, *pending]))
+    key = merged
+    parts, verts = key // V, key % V    # sorted by (partition, vertex)
     part_counts = np.bincount(parts, minlength=k)       # |V(p_i)|
-    edge_counts = np.bincount(assignment, minlength=k)
     covered = len(np.unique(verts))
     rf = float(len(verts)) / max(covered, 1)
 
@@ -132,7 +175,21 @@ def _plan_core(edges, assignment, V, k, pair_cap_quantile):
 def plan_capacities(edges, assignment, V, k, pair_cap_quantile=1.0) -> dict:
     """Capacities of the halo plan WITHOUT materializing the padded arrays
     — cheap enough to run at manifest-writing time on huge graphs."""
-    c = _plan_core(edges, assignment, V, k, pair_cap_quantile)
+    return _capacities(
+        _plan_core(_inmemory_chunks(edges, assignment), V, k,
+                   pair_cap_quantile), k)
+
+
+def plan_capacities_stream(stream, assignment, V, k, pair_cap_quantile=1.0,
+                           chunk_size: int = 1 << 20) -> dict:
+    """``plan_capacities`` over an ``EdgeStream`` + assignment memmap —
+    one chunked sweep, O(chunk + plan) peak memory."""
+    return _capacities(
+        _plan_core(_stream_chunks(stream, assignment, chunk_size), V, k,
+                   pair_cap_quantile), k)
+
+
+def _capacities(c: dict, k: int) -> dict:
     nz = c["nonzero_pair_sizes"]
     return {
         "k": int(k),
@@ -177,9 +234,27 @@ def plan_halo_exchange(edges, assignment, V, k,
                        pair_cap_quantile=1.0) -> HaloPlan:
     """Build the full padded ``HaloPlan`` from an edge->partition
     assignment (see module docstring for the layout)."""
-    c = _plan_core(edges, assignment, V, k, pair_cap_quantile)
-    edges = np.ascontiguousarray(edges)[:, :2].astype(np.int64)
-    assignment = np.asarray(assignment).astype(np.int64)
+    chunks = _inmemory_chunks(edges, assignment)
+    return _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+                       chunks, V, k)
+
+
+def plan_halo_exchange_stream(stream, assignment, V, k, *,
+                              pair_cap_quantile=1.0,
+                              chunk_size: int = 1 << 20) -> HaloPlan:
+    """Out-of-core ``plan_halo_exchange``: chunk the planning sweeps over
+    an ``EdgeStream`` + the engine's assignment memmap, so paper-scale
+    graphs can be planned without the incidence list's edges ever being
+    resident (the ROADMAP "out-of-core planning" follow-up).  Bit-identical
+    to the in-memory planner — stream order is preserved chunk by chunk."""
+    chunks = _stream_chunks(stream, assignment, chunk_size)
+    return _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+                       chunks, V, k)
+
+
+def _build_plan(c: dict, chunks, V, k) -> HaloPlan:
+    """Second sweep: assemble the padded plan arrays from the planning core
+    dict + another pass over the (edges, assignment) chunks."""
     parts, verts = c["parts"], c["verts"]
     part_counts, edge_counts = c["part_counts"], c["edge_counts"]
     v_cap = int(max(part_counts.max(), 1))
@@ -194,22 +269,27 @@ def plan_halo_exchange(edges, assignment, V, k,
     vmap_global[parts, local_of] = verts
     node_mask = (vmap_global >= 0).astype(np.float32)
 
-    # per-partition local edge arrays (stream order preserved)
+    # per-partition local edge arrays (stream order preserved: chunks come
+    # in stream order, the in-chunk sort is stable, and each partition's
+    # rows are appended at its fill cursor)
     loc_edges = np.zeros((k, e_cap, 2), np.int32)
     edge_mask = np.zeros((k, e_cap), np.float32)
-    order = np.argsort(assignment, kind="stable")
-    eoffs = np.zeros(k + 1, np.int64)
-    np.cumsum(edge_counts, out=eoffs[1:])
-    sorted_edges = edges[order]
-    for p in range(k):
-        n = int(edge_counts[p])
-        if not n:
-            continue
-        block = sorted_edges[eoffs[p]:eoffs[p + 1]]
-        vp = vmap_global[p, :part_counts[p]]
-        loc_edges[p, :n, 0] = np.searchsorted(vp, block[:, 0])
-        loc_edges[p, :n, 1] = np.searchsorted(vp, block[:, 1])
-        edge_mask[p, :n] = 1.0
+    fill = np.zeros(k, np.int64)
+    for e, a in chunks():
+        order = np.argsort(a, kind="stable")
+        es, a_s = e[order], a[order]
+        bounds = np.searchsorted(a_s, np.arange(k + 1))
+        for p in range(k):
+            s, t = int(bounds[p]), int(bounds[p + 1])
+            if s == t:
+                continue
+            block = es[s:t]
+            vp = vmap_global[p, :part_counts[p]]
+            n0, n1 = int(fill[p]), int(fill[p]) + (t - s)
+            loc_edges[p, n0:n1, 0] = np.searchsorted(vp, block[:, 0])
+            loc_edges[p, n0:n1, 1] = np.searchsorted(vp, block[:, 1])
+            edge_mask[p, n0:n1] = 1.0
+            fill[p] = n1
 
     # symmetric pair tables: events already sorted by (p, q, v)
     send_idx = np.full((k, k, b_cap), -1, np.int32)

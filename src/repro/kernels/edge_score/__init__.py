@@ -1,2 +1,2 @@
-from .ops import edge_score_choose
+from .ops import edge_score_choose, pallas_ready
 from .ref import edge_score_choose_ref

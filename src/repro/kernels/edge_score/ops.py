@@ -16,6 +16,20 @@ def _on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
 
 
+@functools.lru_cache(maxsize=1)
+def pallas_ready() -> bool:
+    """Can the kernel actually run here (compiled on TPU, interpret mode
+    elsewhere)?  Probed once with a tile-sized dummy call; the streaming
+    engine falls back to the jnp scoring path when this is False."""
+    try:
+        z = jnp.zeros((1,), jnp.int32)
+        jax.block_until_ready(
+            edge_score_choose(z, z, z, z, z, z, z, z, z, z))
+        return True
+    except Exception:  # pragma: no cover - depends on jax build
+        return False
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def edge_score_choose(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
                       pu, pv, *, interpret: bool | None = None):

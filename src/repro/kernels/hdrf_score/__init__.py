@@ -1,2 +1,2 @@
-from .ops import hdrf_choose
+from .ops import hdrf_choose, pallas_ready
 from .ref import hdrf_choose_ref

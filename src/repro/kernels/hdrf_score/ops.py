@@ -12,6 +12,21 @@ from .kernel import BLOCK_E, hdrf_pallas
 LANES = 128
 
 
+@functools.lru_cache(maxsize=1)
+def pallas_ready() -> bool:
+    """Can the kernel actually run here (compiled on TPU, interpret mode
+    elsewhere)?  Probed once with a tile-sized dummy call; the streaming
+    engine falls back to the jnp scoring path when this is False."""
+    try:
+        z1 = jnp.zeros((1,), jnp.float32)
+        zk = jnp.zeros((1, 2), jnp.int8)
+        jax.block_until_ready(
+            hdrf_choose(z1, z1, zk, zk, jnp.zeros((2,), jnp.int32)))
+        return True
+    except Exception:  # pragma: no cover - depends on jax build
+        return False
+
+
 @functools.partial(jax.jit, static_argnames=("lam", "interpret"))
 def hdrf_choose(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1,
                 interpret: bool | None = None):

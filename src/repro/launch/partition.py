@@ -27,8 +27,6 @@ import argparse
 import json
 import os
 
-import numpy as np
-
 from repro.core import (MemmapEdgeStream, PartitionArtifact,
                         SPEC_REGISTRY, ThrottledEdgeStream, run_spec,
                         spec_for)
@@ -50,20 +48,24 @@ def main(argv=None):
     ap.add_argument("--artifact-dir", default=None,
                     help="persist a full PartitionArtifact (assignment + "
                          "manifest + halo-plan arrays) in this directory. "
-                         "NOTE: halo planning is in-memory (O(|E|) peak, "
-                         "unlike the out-of-core partitioning pass — see "
-                         "ROADMAP 'out-of-core planning'); pass --no-plan "
-                         "to keep graph-sized runs out-of-core")
+                         "Halo planning chunks the edge stream against the "
+                         "assignment memmap (O(chunk + plan) peak), so "
+                         "graph-sized runs stay out-of-core end to end")
     ap.add_argument("--no-plan", action="store_true",
                     help="with --artifact-dir: skip the halo-plan arrays "
-                         "(assignment + manifest only, no O(|E|) planning "
-                         "pass)")
+                         "(assignment + manifest only, no planning sweep)")
     ap.add_argument("--plan-json", default=None,
                     help="write a DGL-style partition manifest (halo-plan "
-                         "capacities + replication factor) to this path. "
-                         "NOTE: planning is in-memory (O(|E|) peak, unlike "
-                         "the out-of-core partitioning pass) — see "
-                         "ROADMAP 'out-of-core planning'")
+                         "capacities + replication factor) to this path; "
+                         "capacities are planned out-of-core over the "
+                         "edge stream")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help="engine in-flight chunk budget (default: the "
+                         "spec's; 1 = fully synchronous)")
+    ap.add_argument("--scoring-backend", default=None,
+                    choices=("jnp", "pallas"),
+                    help="scoring hot-path implementation (pallas falls "
+                         "back to jnp where unavailable)")
     ap.add_argument("--pair-cap-quantile", type=float, default=1.0,
                     help="halo-plan boundary-table cap quantile (<1 moves "
                          "over-cap pairs to the psum overflow lane)")
@@ -79,6 +81,10 @@ def main(argv=None):
     overrides = {"alpha": args.alpha, "chunk_size": args.chunk_size}
     if args.algorithm in ("2psl", "2ps-hdrf"):
         overrides["cluster_passes"] = args.cluster_passes
+    if args.pipeline_depth is not None:
+        overrides["pipeline_depth"] = args.pipeline_depth
+    if args.scoring_backend is not None:
+        overrides["scoring_backend"] = args.scoring_backend
     spec = spec_for(args.algorithm, **overrides)
 
     out_path = args.out
@@ -100,12 +106,15 @@ def main(argv=None):
     }
     plan = None
     if args.artifact_dir:
-        edges = (None if args.no_plan else
-                 np.memmap(args.input, dtype=np.uint32,
-                           mode="r").reshape(-1, 2))
+        # out-of-core planning: re-stream the graph chunk by chunk against
+        # the just-written assignment memmap (planning pays no simulated
+        # IO, so hand it the raw memmap stream)
+        plan_stream = (None if args.no_plan else
+                       MemmapEdgeStream(args.input,
+                                        num_vertices=stream.num_vertices))
         art = PartitionArtifact.save(
             args.artifact_dir, res, num_vertices=stream.num_vertices,
-            num_edges=stream.num_edges, edges=edges,
+            num_edges=stream.num_edges, stream=plan_stream,
             pair_cap_quantile=args.pair_cap_quantile,
             graph_path=args.input)
         report["artifact_dir"] = args.artifact_dir
@@ -134,16 +143,15 @@ def _partition_manifest(args, res, stream, plan=None,
     """DGL partition-book shape: one JSON describing every part, plus the
     halo-plan capacity envelope the SPMD runtime allocates from."""
     from repro.dist.partitioned_gnn import (capacities_from_plan,
-                                            plan_capacities)
+                                            plan_capacities_stream)
 
     if plan is not None:
         caps = capacities_from_plan(plan)
     else:
-        edges = np.memmap(args.input, dtype=np.uint32,
-                          mode="r").reshape(-1, 2)
-        caps = plan_capacities(edges, np.asarray(res.assignment),
-                               stream.num_vertices, args.k,
-                               args.pair_cap_quantile)
+        caps = plan_capacities_stream(
+            MemmapEdgeStream(args.input, num_vertices=stream.num_vertices),
+            res.assignment, stream.num_vertices, args.k,
+            args.pair_cap_quantile)
     return {
         "graph_name": args.input,
         "part_method": res.name,

@@ -28,6 +28,38 @@ def test_edge_score_matches_ref(E):
     np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-6)
 
 
+@pytest.mark.parametrize("n_valid", [0, 1, 1000])
+def test_edge_score_padded_streaming_chunk(n_valid):
+    """The engine hands the kernel fixed-size chunks whose tail (or, for
+    the all-invalid tail chunk, the whole chunk) is zero padding: du=dv=0,
+    rep=0, pu=pv=0.  Kernel and oracle must agree on every row — the
+    padding rows must neither NaN nor disturb the valid prefix."""
+    from repro.kernels.edge_score import (edge_score_choose,
+                                          edge_score_choose_ref)
+    C = 2048                                    # streaming chunk size
+    du = np.zeros(C, np.int32)
+    dv = np.zeros(C, np.int32)
+    vu = np.zeros(C, np.int32)
+    vv = np.zeros(C, np.int32)
+    reps = [np.zeros(C, np.int8) for _ in range(4)]
+    pu = np.zeros(C, np.int32)
+    pv = np.zeros(C, np.int32)
+    du[:n_valid] = rng.integers(1, 100, n_valid)
+    dv[:n_valid] = rng.integers(1, 100, n_valid)
+    vu[:n_valid] = rng.integers(1, 1000, n_valid)
+    vv[:n_valid] = rng.integers(1, 1000, n_valid)
+    for r in reps:
+        r[:n_valid] = rng.integers(0, 2, n_valid)
+    pu[:n_valid] = rng.integers(0, 16, n_valid)
+    pv[:n_valid] = rng.integers(0, 16, n_valid)
+    args = [jnp.asarray(x) for x in (du, dv, vu, vv, *reps, pu, pv)]
+    c_k, b_k = edge_score_choose(*args, interpret=True)
+    c_r, b_r = edge_score_choose_ref(*args)
+    assert np.all(np.isfinite(np.asarray(b_k)))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # hdrf_score (k-way scoring baseline)
 # ---------------------------------------------------------------------------
@@ -43,6 +75,31 @@ def test_hdrf_score_matches_ref(E, k):
     sz = jnp.asarray(rng.integers(0, 500, k), jnp.int32)
     c_k, b_k = hdrf_choose(du, dv, ru, rv, sz, interpret=True)
     c_r, b_r = hdrf_choose_ref(du, dv, ru, rv, sz)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_valid", [0, 3, 64])
+def test_hdrf_score_padded_streaming_chunk(n_valid):
+    """Streaming micro-batch shape with a zero-padded tail (all-invalid
+    when n_valid=0): kernel == oracle on every row, no NaN/inf leakage."""
+    from repro.kernels.hdrf_score import hdrf_choose, hdrf_choose_ref
+    E, k = 64, 8                                # engine micro-batch width
+    du = np.zeros(E, np.float32)
+    dv = np.zeros(E, np.float32)
+    ru = np.zeros((E, k), np.int8)
+    rv = np.zeros((E, k), np.int8)
+    du[:n_valid] = rng.integers(1, 100, n_valid)
+    dv[:n_valid] = rng.integers(1, 100, n_valid)
+    ru[:n_valid] = rng.integers(0, 2, (n_valid, k))
+    rv[:n_valid] = rng.integers(0, 2, (n_valid, k))
+    sz = jnp.asarray(rng.integers(0, 500, k), jnp.int32)
+    c_k, b_k = hdrf_choose(jnp.asarray(du), jnp.asarray(dv),
+                           jnp.asarray(ru), jnp.asarray(rv), sz,
+                           interpret=True)
+    c_r, b_r = hdrf_choose_ref(jnp.asarray(du), jnp.asarray(dv),
+                               jnp.asarray(ru), jnp.asarray(rv), sz)
+    assert np.all(np.isfinite(np.asarray(b_k)))
     np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
     np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-5)
 

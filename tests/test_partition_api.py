@@ -39,6 +39,9 @@ def test_registry_covers_every_legacy_partitioner():
     lambda: TwoPSLSpec(cluster_passes=0),
     lambda: TwoPSLSpec(max_vol_factor=-1.0),
     lambda: TwoPSLSpec(scoring="nope"),
+    lambda: TwoPSLSpec(pipeline_depth=0),
+    lambda: TwoPSLSpec(pipeline_depth=1.5),
+    lambda: TwoPSLSpec(scoring_backend="cuda"),
     lambda: HDRFSpec(lam=0.0),
     lambda: HDRFSpec(chunk_size=100),     # not a multiple of the scan width
     lambda: StatelessSpec(variant="dbh"),
