@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 CI entrypoint.
 #
-#   scripts/ci.sh          fast loop: CLI smoke stage + CPU backend pytest,
-#                          slow SPMD subprocess tests excluded
-#   scripts/ci.sh --full   CLI smoke stage + the complete tier-1 suite
+#   scripts/ci.sh              fast loop: CLI smoke stage + CPU backend
+#                              pytest, slow SPMD subprocess tests excluded
+#   scripts/ci.sh --full       CLI smoke stage + the complete tier-1 suite
+#   scripts/ci.sh --multihost  fast loop + the opt-in multihost stage (the
+#                              slow host-grouped SPMD subprocess tests:
+#                              EGNN + GIN on 2 emulated hosts x 4 devices)
 #
-# Extra args after the mode flag are forwarded to pytest.
+# Mode flags combine; extra args after them are forwarded to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,10 +16,15 @@ export JAX_PLATFORMS=cpu
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 marker=(-m "not slow")
-if [[ "${1:-}" == "--full" ]]; then
-    marker=()
+multihost=0
+while [[ "${1:-}" == "--full" || "${1:-}" == "--multihost" ]]; do
+    if [[ "$1" == "--full" ]]; then
+        marker=()
+    else
+        multihost=1
+    fi
     shift
-fi
+done
 
 # ---- CLI smoke stage: partition a tiny memmapped graph end-to-end into a
 # PartitionArtifact, then reload assignment + cached halo plan ------------
@@ -73,6 +81,16 @@ assert {"geomean_best_speedup", "per_algo_geomean_best_speedup",
 print(f"bench smoke OK: geomean {s['geomean_best_speedup']}x over the "
       f"synchronous engine (tiny graph — schema check, not a perf gate)")
 PY
+
+# ---- multihost stage (opt-in): host-grouped SPMD parity in subprocesses
+# with 8 emulated host devices — minutes, so never part of the fast loop.
+# --full already runs every slow test, so the stage would only duplicate
+# work there ------------------------------------------------------------
+if [[ "$multihost" == 1 && ${#marker[@]} -gt 0 ]]; then
+    python -m pytest -x -q -m slow tests/test_partitioned_gnn.py \
+        -k "egnn or hostgrouped"
+    echo "multihost stage OK: host-grouped EGNN + GIN SPMD parity"
+fi
 
 # no exec: the EXIT trap must still fire to clean up the smoke dir
 python -m pytest -x -q "${marker[@]}" "$@"

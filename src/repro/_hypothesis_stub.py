@@ -1,15 +1,20 @@
 """Deterministic stand-in for the slice of the ``hypothesis`` API the test
-suite uses (``given``/``settings`` + ``integers``/``lists``/``sampled_from``
-strategies).
+suite uses (``given``/``settings`` plus the ``integers``/``lists``/
+``sampled_from``/``booleans``/``floats``/``just``/``tuples``/``composite``
+strategies — ``composite`` is how the property suites build integer edge
+arrays deterministically from a drawn seed).
 
 The container image cannot install packages, so ``tests/conftest.py``
 registers this module under ``sys.modules['hypothesis']`` ONLY when the
-real library is absent — with hypothesis installed, nothing here runs.
+real library is absent — with hypothesis installed, nothing here runs, and
+every test is written against the real ``hypothesis.strategies`` subset
+mirrored here so the suite is byte-for-byte the same under both.
 Examples are drawn from a per-test seeded PRNG, so runs are reproducible;
 there is no shrinking, which only matters when a property fails.
 """
 from __future__ import annotations
 
+import inspect
 import random
 import types
 
@@ -46,9 +51,30 @@ def lists(elements: _Strategy, *, min_size=0, max_size=10) -> _Strategy:
     return _Strategy(sample)
 
 
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` becomes a strategy factory.
+    ``draw`` resolves sub-strategies against the per-test PRNG, so a
+    composite that e.g. draws a seed and builds an integer edge array from
+    it is exactly as deterministic as the scalar strategies."""
+    def factory(*args, **kwargs):
+        return _Strategy(
+            lambda rng: fn(lambda s: s.example(rng), *args, **kwargs))
+    factory.__name__ = fn.__name__
+    return factory
+
+
 strategies = types.SimpleNamespace(
     integers=integers, sampled_from=sampled_from, booleans=booleans,
-    floats=floats, lists=lists)
+    floats=floats, lists=lists, just=just, tuples=tuples,
+    composite=composite)
 
 
 def settings(max_examples: int = 20, deadline=None, **_):
@@ -59,20 +85,37 @@ def settings(max_examples: int = 20, deadline=None, **_):
 
 
 def given(*strats, **kw_strats):
+    """Like ``hypothesis.given``: positional strategies bind to the
+    RIGHTMOST test parameters, keyword strategies to their names, and the
+    remaining (leading) parameters stay visible to pytest — so fixtures
+    and ``pytest.mark.parametrize`` compose with ``@given`` exactly as
+    with the real library."""
     def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        n_pos = len(strats)
+        pos_names = names[len(names) - n_pos:] if n_pos else []
+        keep = [nm for nm in names[:len(names) - n_pos]
+                if nm not in kw_strats]
+
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_stub_max_examples",
                         getattr(fn, "_stub_max_examples", 20))
             rng = random.Random(fn.__qualname__)   # reproducible per test
             for _ in range(n):
-                vals = [s.example(rng) for s in strats]
-                kvals = {k: s.example(rng) for k, s in kw_strats.items()}
-                fn(*args, *vals, **{**kwargs, **kvals})
-        # NOTE: no functools.wraps — pytest must see the (*args, **kwargs)
-        # signature, not the strategy parameters (they are not fixtures)
+                vals = {nm: s.example(rng)
+                        for nm, s in zip(pos_names, strats)}
+                vals.update({k: s.example(rng)
+                             for k, s in kw_strats.items()})
+                fn(*args, **{**kwargs, **vals})
+
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__
+        # pytest must see ONLY the non-strategy parameters (strategy
+        # parameters are not fixtures; leading ones may be)
+        wrapper.__signature__ = inspect.Signature(
+            [sig.parameters[nm] for nm in keep])
         wrapper._stub_max_examples = getattr(fn, "_stub_max_examples", 20)
         return wrapper
     return deco

@@ -10,11 +10,18 @@ run once.  Directory layout::
       manifest.json     spec (to_dict), graph meta, quality, timings,
                         halo-plan capacity envelope, per-part edge counts
       halo_plan.npz     the full padded HaloPlan arrays (optional)
+      host_plan.npz     host-grouped exchange tables (optional, format v2):
+                        the ``HostHaloPlan`` re-slicing of halo_plan.npz
+                        for a multi-host (DCN-aware) mesh layout
 
 ``PartitionArtifact.load(dir)`` memmaps the assignment lazily and
 rebuilds cached ``HaloPlan``s straight from the ``.npz`` — closing the
 ROADMAP "plan caching" follow-up: ``artifact.halo_plan()`` is bit-identical
 to a fresh ``plan_halo_exchange`` without touching the edge stream.
+``artifact.host_halo_plan()`` does the same for the host-grouped layout.
+
+Format history: v1 (PR 2) had no host plan; v2 adds the optional
+``host_plan`` manifest block + ``.npz``.  v1 artifacts still load.
 """
 from __future__ import annotations
 
@@ -31,11 +38,17 @@ from .specs import PartitionerSpec, spec_from_dict
 ASSIGNMENT_FILE = "assignment.bin"
 MANIFEST_FILE = "manifest.json"
 HALO_PLAN_FILE = "halo_plan.npz"
-FORMAT_VERSION = 1
+HOST_PLAN_FILE = "host_plan.npz"
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 #: HaloPlan fields that are plain ints/floats (stored as 0-d npz entries).
 _PLAN_SCALARS = ("k", "v_cap", "e_cap", "b_cap", "o_cap",
                  "replication_factor")
+#: HostHaloPlan scalar fields (its ``base`` lives in halo_plan.npz).
+_HOST_SCALARS = ("num_hosts", "parts_per_host", "hb_cap")
+_HOST_ARRAYS = ("host_of", "intra_send", "intra_recv", "hsend_idx",
+                "hrecv_idx", "host_pair_sizes")
 
 
 def _json_safe(d: dict) -> dict:
@@ -51,6 +64,7 @@ class PartitionArtifact:
     manifest: dict
     _assignment: np.ndarray | None = None
     _plan: object | None = None            # cached HaloPlan
+    _host_plan: object | None = None       # cached HostHaloPlan
 
     # -- accessors -------------------------------------------------------
     @property
@@ -100,6 +114,27 @@ class PartitionArtifact:
             self._plan = HaloPlan(**kw)
         return self._plan
 
+    def has_host_plan(self) -> bool:
+        return os.path.exists(os.path.join(self.path, HOST_PLAN_FILE))
+
+    def host_halo_plan(self):
+        """Reload the persisted host-grouped ``HostHaloPlan`` (cached; no
+        graph IO — its base plan comes from ``halo_plan()``)."""
+        if self._host_plan is None:
+            from repro.dist.multihost import HostHaloPlan
+            npz_path = os.path.join(self.path, HOST_PLAN_FILE)
+            if not os.path.exists(npz_path):
+                raise FileNotFoundError(
+                    f"{self.path} was saved without a host plan; re-save "
+                    f"with host_groups= (or --hosts) to enable the "
+                    f"multi-host layout")
+            with np.load(npz_path) as z:
+                kw = {name: z[name] for name in _HOST_ARRAYS}
+                kw.update({name: int(z[name][()])
+                           for name in _HOST_SCALARS})
+            self._host_plan = HostHaloPlan(base=self.halo_plan(), **kw)
+        return self._host_plan
+
     # -- persistence -----------------------------------------------------
     @classmethod
     def save(cls, path: str, result: PartitionRunResult, *,
@@ -107,12 +142,18 @@ class PartitionArtifact:
              spec: PartitionerSpec | None = None,
              plan=None, edges: np.ndarray | None = None,
              stream=None, pair_cap_quantile: float = 1.0,
+             host_groups=None,
              graph_path: str | None = None) -> "PartitionArtifact":
         """Persist a run.  The halo plan is taken from ``plan`` if given,
         else planned out-of-core from ``stream`` (an ``EdgeStream``,
         chunked against the just-written assignment memmap — O(chunk+plan)
         peak), else computed in-memory from ``edges``; with none of the
-        three, the artifact carries only assignment + manifest."""
+        three, the artifact carries only assignment + manifest.
+
+        ``host_groups`` (a host count or explicit groups, see
+        ``repro.dist.multihost``) additionally persists the host-grouped
+        re-slicing of the plan in ``host_plan.npz``; passing an already
+        host-grouped ``HostHaloPlan`` as ``plan`` does the same."""
         spec = spec if spec is not None else result.spec
         if spec is None:
             raise ValueError("no spec: pass spec= or run via run_spec")
@@ -140,6 +181,17 @@ class PartitionArtifact:
                                       result.k,
                                       pair_cap_quantile=pair_cap_quantile)
 
+        host_plan = None
+        if plan is not None and hasattr(plan, "base"):   # HostHaloPlan
+            host_plan, plan = plan, plan.base
+        elif plan is not None and host_groups is not None:
+            from repro.dist.multihost import host_plan_from_halo
+            host_plan = host_plan_from_halo(plan, host_groups)
+        elif host_groups is not None:
+            raise ValueError(
+                "host_groups= needs a halo plan to re-slice: pass plan=, "
+                "edges=, or stream= as well")
+
         manifest = {
             "format_version": FORMAT_VERSION,
             "spec": spec.to_dict(),
@@ -156,6 +208,7 @@ class PartitionArtifact:
             "simulated_io_s": round(result.simulated_io_seconds, 6),
             "extras": _json_safe(result.extras),
             "halo_plan": None,
+            "host_plan": None,
         }
         if plan is not None:
             arrays = {f.name: getattr(plan, f.name)
@@ -166,17 +219,24 @@ class PartitionArtifact:
                 "pair_cap_quantile": pair_cap_quantile,
                 **{s: getattr(plan, s) for s in _PLAN_SCALARS},
             }
+        if host_plan is not None:
+            arrays = {name: getattr(host_plan, name)
+                      for name in _HOST_ARRAYS + _HOST_SCALARS}
+            np.savez(os.path.join(path, HOST_PLAN_FILE), **arrays)
+            manifest["host_plan"] = {"path": HOST_PLAN_FILE,
+                                     **host_plan.dcn_summary()}
         with open(os.path.join(path, MANIFEST_FILE), "w") as f:
             json.dump(manifest, f, indent=2)
         return cls(path=path, manifest=manifest, _assignment=None,
-                   _plan=plan)
+                   _plan=plan, _host_plan=host_plan)
 
     @classmethod
     def load(cls, path: str) -> "PartitionArtifact":
         with open(os.path.join(path, MANIFEST_FILE)) as f:
             manifest = json.load(f)
         version = manifest.get("format_version")
-        if version != FORMAT_VERSION:
+        if version not in SUPPORTED_VERSIONS:
             raise ValueError(f"{path}: unsupported artifact format "
-                             f"{version!r} (want {FORMAT_VERSION})")
+                             f"{version!r} (want one of "
+                             f"{SUPPORTED_VERSIONS})")
         return cls(path=path, manifest=manifest)

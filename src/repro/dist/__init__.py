@@ -33,22 +33,29 @@ from .sharding import (best_spec, constrain, fsdp_axes, gnn_batch_specs,
                        recsys_param_specs)
 from .partitioned_gnn import (HaloPlan, capacities_from_plan,
                               load_halo_plan,
+                              make_partitioned_egnn_step,
                               make_partitioned_gatedgcn_step,
                               make_partitioned_gin_step,
                               make_partitioned_gnn_step,
+                              partitioned_egnn_forward,
+                              partitioned_egnn_loss,
                               partitioned_gatedgcn_loss,
                               partitioned_gin_loss, plan_capacities,
                               plan_capacities_stream, plan_halo_exchange,
                               plan_halo_exchange_stream)
+from .multihost import (HostHaloPlan, host_plan_from_halo,
+                        normalize_host_groups, split_mesh_axes)
 
 __all__ = [
     "best_spec", "constrain", "fsdp_axes", "gnn_batch_specs",
     "lm_batch_specs", "lm_cache_specs", "lm_param_specs", "opt_state_specs",
-    "recsys_batch_specs", "recsys_param_specs", "HaloPlan",
-    "capacities_from_plan", "load_halo_plan",
-    "make_partitioned_gatedgcn_step",
+    "recsys_batch_specs", "recsys_param_specs", "HaloPlan", "HostHaloPlan",
+    "capacities_from_plan", "host_plan_from_halo", "load_halo_plan",
+    "make_partitioned_egnn_step", "make_partitioned_gatedgcn_step",
     "make_partitioned_gin_step", "make_partitioned_gnn_step",
+    "normalize_host_groups", "partitioned_egnn_forward",
+    "partitioned_egnn_loss",
     "partitioned_gatedgcn_loss", "partitioned_gin_loss", "plan_capacities",
     "plan_capacities_stream", "plan_halo_exchange",
-    "plan_halo_exchange_stream",
+    "plan_halo_exchange_stream", "split_mesh_axes",
 ]

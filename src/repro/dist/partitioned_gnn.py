@@ -35,6 +35,7 @@ from __future__ import annotations
 import functools
 import os
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
@@ -231,25 +232,42 @@ class HaloPlan:
 
 
 def plan_halo_exchange(edges, assignment, V, k,
-                       pair_cap_quantile=1.0) -> HaloPlan:
+                       pair_cap_quantile=1.0, *, host_groups=None):
     """Build the full padded ``HaloPlan`` from an edge->partition
-    assignment (see module docstring for the layout)."""
+    assignment (see module docstring for the layout).
+
+    ``host_groups`` (a host count or explicit contiguous groups, see
+    ``dist.multihost``) switches to the host-grouped DCN-aware layout and
+    returns a ``HostHaloPlan`` wrapping the identical base plan."""
     chunks = _inmemory_chunks(edges, assignment)
-    return _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+    plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
                        chunks, V, k)
+    return _maybe_host_plan(plan, host_groups)
 
 
 def plan_halo_exchange_stream(stream, assignment, V, k, *,
                               pair_cap_quantile=1.0,
-                              chunk_size: int = 1 << 20) -> HaloPlan:
+                              chunk_size: int = 1 << 20,
+                              host_groups=None):
     """Out-of-core ``plan_halo_exchange``: chunk the planning sweeps over
     an ``EdgeStream`` + the engine's assignment memmap, so paper-scale
     graphs can be planned without the incidence list's edges ever being
     resident (the ROADMAP "out-of-core planning" follow-up).  Bit-identical
-    to the in-memory planner — stream order is preserved chunk by chunk."""
+    to the in-memory planner — stream order is preserved chunk by chunk.
+    ``host_groups`` behaves exactly as in ``plan_halo_exchange`` (the host
+    re-slicing is a pure table transform of the finished base plan, so the
+    streamed host plan is bit-identical to the in-memory one too)."""
     chunks = _stream_chunks(stream, assignment, chunk_size)
-    return _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+    plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
                        chunks, V, k)
+    return _maybe_host_plan(plan, host_groups)
+
+
+def _maybe_host_plan(plan, host_groups):
+    if host_groups is None:
+        return plan
+    from repro.dist.multihost import host_plan_from_halo
+    return host_plan_from_halo(plan, host_groups)
 
 
 def _build_plan(c: dict, chunks, V, k) -> HaloPlan:
@@ -355,18 +373,48 @@ def load_halo_plan(artifact) -> HaloPlan:
 # SPMD execution
 # ---------------------------------------------------------------------------
 
-def _halo_combine(x, *, send, recv, ov, axes, v_cap):
+class _AxisLayout(NamedTuple):
+    """Mesh-axis split the combinator runs over.  ``pair``: the pairwise
+    all_to_all axes (all mesh axes single-host; the trailing intra-host
+    device axes when host-grouped).  ``host``: the leading DCN axes of the
+    host-grouped layout (empty otherwise).  ``all``: every mesh axis —
+    overflow psum and loss reductions."""
+    pair: tuple
+    host: tuple
+    all: tuple
+
+
+def _as_layout(axes) -> _AxisLayout:
+    """Accept either an _AxisLayout or the legacy plain axis tuple."""
+    if isinstance(axes, _AxisLayout):
+        return axes
+    axes = tuple(axes) if not isinstance(axes, str) else (axes,)
+    return _AxisLayout(pair=axes, host=(), all=axes)
+
+
+def _halo_combine(x, *, send, recv, ov, axes, v_cap, psum_axes=None,
+                  hsend=None, hrecv=None, host_axes=()):
     """Reconcile per-replica partial aggregates: after this, every replica
     of a vertex holds the full (global) aggregate.
 
     x: (v_cap, d) partials.  Pairwise lanes go through one tiled
-    all_to_all + scatter-add; the overflow lane is a dense psum."""
+    all_to_all + scatter-add over ``axes``; the overflow lane is a dense
+    psum over ``psum_axes`` (default: ``axes``).
+
+    Host-grouped layout (``hsend``/``hrecv`` given): ``axes`` are the
+    intra-host device axes, so the pairwise step leaves every replica with
+    its HOST partial; then each per-host-pair aggregated lane is gathered
+    from the unique leader replica, host-replicated (psum over ``axes``),
+    exchanged once over the DCN ``host_axes``, and scatter-added into every
+    local replica.  With a single host the extra tables are empty and this
+    is exactly the single-level combine."""
     d = x.shape[-1]
+    psum_axes = axes if psum_axes is None else psum_axes
     o_cap = ov.shape[0]
     if o_cap:                      # gather overflow partials BEFORE any add
         ov_ok = ov >= 0
         ov_buf = jnp.where(ov_ok[:, None], x[jnp.where(ov_ok, ov, 0)], 0.0)
-        ov_tot = jax.lax.psum(ov_buf, axes)
+        ov_tot = jax.lax.psum(ov_buf, psum_axes)
     if send.shape[0] > 1 and send.shape[1] > 0:
         s_ok = (send >= 0)[..., None]
         buf = jnp.where(s_ok, x[jnp.where(send >= 0, send, 0)], 0.0)
@@ -374,9 +422,48 @@ def _halo_combine(x, *, send, recv, ov, axes, v_cap):
                                  tiled=True)
         r_idx = jnp.where(recv >= 0, recv, v_cap).reshape(-1)
         x = x.at[r_idx].add(buf.reshape(-1, d), mode="drop")
+    if hsend is not None and hsend.shape[0] > 1 and hsend.shape[1] > 0:
+        # x now holds host partials; leaders contribute them once per lane
+        h_ok = (hsend >= 0)[..., None]
+        hbuf = jnp.where(h_ok, x[jnp.where(hsend >= 0, hsend, 0)], 0.0)
+        if axes:                   # host-replicate the aggregated lane
+            hbuf = jax.lax.psum(hbuf, axes)
+        hbuf = jax.lax.all_to_all(hbuf, host_axes, split_axis=0,
+                                  concat_axis=0, tiled=True)
+        r_idx = jnp.where(hrecv >= 0, hrecv, v_cap).reshape(-1)
+        x = x.at[r_idx].add(hbuf.reshape(-1, d), mode="drop")
     if o_cap:
         x = x.at[jnp.where(ov >= 0, ov, v_cap)].set(ov_tot, mode="drop")
     return x
+
+
+def _combiner(plan, axes: _AxisLayout, v_cap):
+    """The ``_halo_combine`` closure for one device's plan-array slice —
+    routes onto the two-level path when the plan carries host lanes.
+
+    The batch's plan arrays and the step's axis layout MUST come from the
+    same plan: a host-grouped layout over flat (k, k, b_cap) tables is
+    shape-compatible with the intra-host all_to_all (k divides by the
+    device-axis size), so a mismatch would silently exchange wrong lanes
+    — fail loudly instead.  (A 1-host HostHaloPlan carries the key with
+    H == 1 and an empty layout — both levels inactive, consistent.)"""
+    lanes_active = "hsend_idx" in plan and plan["hsend_idx"].shape[1] > 1
+    if lanes_active != bool(axes.host):
+        raise ValueError(
+            "plan arrays / mesh layout mismatch: batch['plan'] "
+            + ("carries host lanes but the step was built from a "
+               "single-level plan" if lanes_active else
+               "has no host lanes but the step was built from a "
+               "host-grouped plan")
+            + "; pass the same plan's device_arrays() to the batch as "
+              "the step factory's dims")
+    kw = dict(send=plan["send_idx"][0], recv=plan["recv_idx"][0],
+              ov=plan["ov_idx"][0], axes=axes.pair, psum_axes=axes.all,
+              v_cap=v_cap)
+    if "hsend_idx" in plan:
+        kw.update(hsend=plan["hsend_idx"][0], hrecv=plan["hrecv_idx"][0],
+                  host_axes=axes.host)
+    return functools.partial(_halo_combine, **kw)
 
 
 def partitioned_gin_loss(cfg, params, batch, *, axes, v_cap):
@@ -386,6 +473,7 @@ def partitioned_gin_loss(cfg, params, batch, *, axes, v_cap):
     global batch statistics would break partition locality); the loss is
     averaged over MASTER vertices only (``batch['loss_mask']``), so every
     covered vertex is counted exactly once across the mesh."""
+    axes = _as_layout(axes)
     plan = batch["plan"]
     nodes = batch["nodes"][0]                       # (v_cap, d_feat)
     labels = batch["labels"][0]
@@ -393,9 +481,7 @@ def partitioned_gin_loss(cfg, params, batch, *, axes, v_cap):
     nmask = plan["node_mask"][0][:, None]
     e = plan["edges"][0]
     em = plan["edge_mask"][0][:, None]
-    combine = functools.partial(
-        _halo_combine, send=plan["send_idx"][0], recv=plan["recv_idx"][0],
-        ov=plan["ov_idx"][0], axes=axes, v_cap=v_cap)
+    combine = _combiner(plan, axes, v_cap)
 
     src, dst = e[:, 0], e[:, 1]
     h = L.dense(params["encoder"], nodes) * nmask
@@ -408,10 +494,15 @@ def partitioned_gin_loss(cfg, params, batch, *, axes, v_cap):
         h = jax.nn.relu(h) * nmask
 
     logits = L.dense(params["head"], h).astype(jnp.float32)
+    return _masked_xent(logits, labels, lmask, axes)
+
+
+def _masked_xent(logits, labels, lmask, axes: _AxisLayout):
+    """Masters-only cross-entropy, psum'd over the whole mesh."""
     logp = jax.nn.log_softmax(logits, axis=-1)
     ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
-    num = jax.lax.psum(jnp.sum(ll * lmask), axes)
-    den = jax.lax.psum(jnp.sum(lmask), axes)
+    num = jax.lax.psum(jnp.sum(ll * lmask), axes.all)
+    den = jax.lax.psum(jnp.sum(lmask), axes.all)
     return -num / jnp.maximum(den, 1.0)
 
 
@@ -424,6 +515,7 @@ def partitioned_gatedgcn_loss(cfg, params, batch, *, axes, v_cap):
     the two per-destination partial sums of the gated mean (numerator and
     gate normalizer) go through ``_halo_combine``; the division happens
     after both are globally reconciled."""
+    axes = _as_layout(axes)
     plan = batch["plan"]
     nodes = batch["nodes"][0]                       # (v_cap, d_feat)
     labels = batch["labels"][0]
@@ -431,9 +523,7 @@ def partitioned_gatedgcn_loss(cfg, params, batch, *, axes, v_cap):
     nmask = plan["node_mask"][0][:, None]
     e = plan["edges"][0]
     em = plan["edge_mask"][0][:, None]
-    combine = functools.partial(
-        _halo_combine, send=plan["send_idx"][0], recv=plan["recv_idx"][0],
-        ov=plan["ov_idx"][0], axes=axes, v_cap=v_cap)
+    combine = _combiner(plan, axes, v_cap)
 
     src, dst = e[:, 0], e[:, 1]
     h = L.dense(params["encoder"], nodes) * nmask
@@ -451,44 +541,109 @@ def partitioned_gatedgcn_loss(cfg, params, batch, *, axes, v_cap):
         ef = ef + jax.nn.relu(e_new)
 
     logits = L.dense(params["head"], h).astype(jnp.float32)
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
-    num = jax.lax.psum(jnp.sum(ll * lmask), axes)
-    den = jax.lax.psum(jnp.sum(lmask), axes)
-    return -num / jnp.maximum(den, 1.0)
+    return _masked_xent(logits, labels, lmask, axes)
+
+
+def partitioned_egnn_forward(cfg, params, batch, *, axes, v_cap):
+    """Per-device (shard_map body) EGNN forward over one partition,
+    returning the final ``(h, x)`` node features AND coordinates.
+
+    EGNN is the third ROADMAP model and the first with a *coordinate
+    channel*: besides the scalar messages, each layer moves positions by a
+    degree-normalized sum of radially-weighted difference vectors.  Both
+    per-destination partial sums — the feature aggregate and the (v_cap, 3)
+    coordinate numerator — reconcile through the same ``_halo_combine``,
+    and the degree normalizer is combined once up front; since every
+    replica starts from identical coords and applies identical reconciled
+    updates, positions stay consistent across the mesh without a separate
+    position broadcast."""
+    from repro.models.gnn import _mlp2, egnn_layer_terms
+
+    axes = _as_layout(axes)
+    plan = batch["plan"]
+    nodes = batch["nodes"][0]                       # (v_cap, d_feat)
+    nmask = plan["node_mask"][0][:, None]
+    e = plan["edges"][0]
+    em = plan["edge_mask"][0][:, None]
+    combine = _combiner(plan, axes, v_cap)
+
+    src, dst = e[:, 0], e[:, 1]
+    h = L.dense(params["encoder"], nodes) * nmask
+    x = batch["coords"][0].astype(h.dtype)
+    deg = combine(jax.ops.segment_sum(plan["edge_mask"][0][:, None], dst,
+                                      num_segments=v_cap)) + 1.0
+    for lp in params["layers"]:
+        m, xmsg = egnn_layer_terms(lp, h, x, src, dst, em)
+        x = x + combine(jax.ops.segment_sum(xmsg, dst,
+                                            num_segments=v_cap)) / deg
+        agg = combine(jax.ops.segment_sum(m, dst, num_segments=v_cap))
+        h = (h + _mlp2(lp["phi_h"], jnp.concatenate([h, agg], axis=-1))) \
+            * nmask
+    return h, x
+
+
+def partitioned_egnn_loss(cfg, params, batch, *, axes, v_cap):
+    """Masters-only masked node loss over ``partitioned_egnn_forward``."""
+    axes = _as_layout(axes)
+    h, _ = partitioned_egnn_forward(cfg, params, batch, axes=axes,
+                                    v_cap=v_cap)
+    logits = L.dense(params["head"], h).astype(jnp.float32)
+    return _masked_xent(logits, batch["labels"][0], batch["loss_mask"][0],
+                        axes)
 
 
 PARTITIONED_LOSSES = {"gin": partitioned_gin_loss,
-                      "gatedgcn": partitioned_gatedgcn_loss}
+                      "gatedgcn": partitioned_gatedgcn_loss,
+                      "egnn": partitioned_egnn_loss}
 
 
-def _plan_dims(dims) -> tuple[int, int]:
-    """(k, v_cap) from a capacities dict, a HaloPlan, or a
-    PartitionArtifact (which loads its cached plan)."""
+def _plan_dims(dims) -> tuple[int, int, int | None]:
+    """(k, v_cap, num_hosts|None) from a capacities dict, a HaloPlan, a
+    HostHaloPlan, or a PartitionArtifact (which loads its cached plan —
+    the host-grouped one when the artifact persisted it)."""
     if hasattr(dims, "halo_plan"):              # PartitionArtifact
-        dims = dims.halo_plan()
+        if getattr(dims, "has_host_plan", lambda: False)():
+            dims = dims.host_halo_plan()
+        else:
+            dims = dims.halo_plan()
+    from repro.dist.multihost import HostHaloPlan
+    if isinstance(dims, HostHaloPlan):
+        return dims.k, dims.v_cap, dims.num_hosts
     if isinstance(dims, HaloPlan):
-        return dims.k, dims.v_cap
-    return int(dims["k"]), int(dims["v_cap"])
+        return dims.k, dims.v_cap, None
+    return (int(dims["k"]), int(dims["v_cap"]),
+            int(dims["num_hosts"]) if "num_hosts" in dims else None)
 
 
 def make_partitioned_gnn_step(model, cfg, mesh, dims, *, lr=1e-3):
     """shard_map SPMD GNN train step: one partition per device.
 
-    ``model`` is a ``PARTITIONED_LOSSES`` key ('gin', 'gatedgcn').  ``dims``
-    may be a ``HaloPlan``, a ``plan_capacities`` dict, or a
-    ``PartitionArtifact`` (whose persisted plan supplies the capacities).
-    Batch layout: ``nodes (k, v_cap, d)``, ``labels``/``loss_mask
-    (k, v_cap)``, ``plan`` = HaloPlan.device_arrays.  Params are
-    replicated; grads reduce through the loss psum."""
+    ``model`` is a ``PARTITIONED_LOSSES`` key ('gin', 'gatedgcn', 'egnn').
+    ``dims`` may be a ``HaloPlan``, a ``HostHaloPlan``, a
+    ``plan_capacities`` dict, or a ``PartitionArtifact`` (whose persisted
+    plan supplies the capacities).  Batch layout: ``nodes (k, v_cap, d)``,
+    ``labels``/``loss_mask (k, v_cap)`` (plus ``coords (k, v_cap, 3)`` for
+    'egnn'), ``plan`` = the plan's ``device_arrays``.  Params are
+    replicated; grads reduce through the loss psum.
+
+    With a host-grouped plan the leading mesh axes whose sizes multiply to
+    ``num_hosts`` become the DCN group and the trailing axes the intra-host
+    device group (``dist.multihost.split_mesh_axes``); a single-level plan
+    keeps today's flat all_to_all over every axis."""
     loss_body = PARTITIONED_LOSSES[model]
-    k, v_cap = _plan_dims(dims)
-    axes = tuple(mesh.axis_names)
+    k, v_cap, num_hosts = _plan_dims(dims)
+    all_axes = tuple(mesh.axis_names)
     n_dev = int(np.prod(np.shape(mesh.devices)))
     if k != n_dev:
         raise ValueError(f"plan has k={k} partitions but mesh has "
                          f"{n_dev} devices")
-    part_spec = P(axes)
+    if num_hosts is None:
+        axes = _AxisLayout(pair=all_axes, host=(), all=all_axes)
+    else:
+        from repro.dist.multihost import split_mesh_axes
+        host_axes, dev_axes = split_mesh_axes(mesh, num_hosts)
+        axes = _AxisLayout(pair=dev_axes, host=host_axes, all=all_axes)
+    part_spec = P(all_axes)
 
     def loss_fn(params, batch):
         body = functools.partial(loss_body, cfg, axes=axes, v_cap=v_cap)
@@ -509,3 +664,7 @@ def make_partitioned_gin_step(cfg, mesh, dims, *, lr=1e-3):
 
 def make_partitioned_gatedgcn_step(cfg, mesh, dims, *, lr=1e-3):
     return make_partitioned_gnn_step("gatedgcn", cfg, mesh, dims, lr=lr)
+
+
+def make_partitioned_egnn_step(cfg, mesh, dims, *, lr=1e-3):
+    return make_partitioned_gnn_step("egnn", cfg, mesh, dims, lr=lr)

@@ -20,6 +20,13 @@ Outputs, from lightest to heaviest:
                           ``PartitionArtifact.load(DIR)`` then hands
                           downstream SPMD training its cached ``HaloPlan``
                           without re-streaming the graph.
+* ``--hosts H``           (with ``--artifact-dir``) additionally persists
+                          the host-grouped DCN-aware exchange layout
+                          (``host_plan.npz``, manifest format v2): intra-
+                          host pair tables + per-host-pair aggregated
+                          lanes, so SPMD steps on an H-host mesh exchange
+                          each boundary vertex once per host pair instead
+                          of once per partition pair.
 """
 from __future__ import annotations
 
@@ -54,6 +61,14 @@ def main(argv=None):
     ap.add_argument("--no-plan", action="store_true",
                     help="with --artifact-dir: skip the halo-plan arrays "
                          "(assignment + manifest only, no planning sweep)")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="with --artifact-dir: also persist the "
+                         "host-grouped (DCN-aware) exchange layout for "
+                         "this many hosts (must divide --k; partitions "
+                         "p*k/hosts..(p+1)*k/hosts-1 share a host). "
+                         "Downstream SPMD steps loading the artifact run "
+                         "the two-level intra-host all_to_all + "
+                         "aggregated inter-host lane exchange")
     ap.add_argument("--plan-json", default=None,
                     help="write a DGL-style partition manifest (halo-plan "
                          "capacities + replication factor) to this path; "
@@ -73,6 +88,9 @@ def main(argv=None):
                     help="simulate a storage device with this read rate")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
+    if args.hosts is not None and (not args.artifact_dir or args.no_plan):
+        ap.error("--hosts needs --artifact-dir (and a halo plan, so it is "
+                 "incompatible with --no-plan)")
 
     stream = MemmapEdgeStream(args.input)
     if args.throttle_mbps:
@@ -116,11 +134,13 @@ def main(argv=None):
             args.artifact_dir, res, num_vertices=stream.num_vertices,
             num_edges=stream.num_edges, stream=plan_stream,
             pair_cap_quantile=args.pair_cap_quantile,
-            graph_path=args.input)
+            host_groups=args.hosts, graph_path=args.input)
         report["artifact_dir"] = args.artifact_dir
         if art.has_halo_plan():
             plan = art.halo_plan()
             report["b_cap"] = plan.b_cap
+        if art.has_host_plan():
+            report["host_plan"] = art.host_halo_plan().dcn_summary()
     if args.plan_json:
         # reuse the plan computed for the artifact (same quantile) rather
         # than running the O(|E|) planning core a second time

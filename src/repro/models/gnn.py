@@ -207,6 +207,22 @@ def egnn_init(cfg: EGNNConfig, key):
     }
 
 
+def egnn_layer_terms(lp, h, x, src, dst, emask):
+    """Per-edge terms of one EGNN layer: the masked scalar messages ``m``
+    and the radially-weighted coordinate messages ``diff * phi_x(m)``.
+
+    Shared verbatim by the dense model below and the partition-aware
+    halo-exchange step (``repro.dist.partitioned_gnn``): both aggregate
+    these per destination — the distributed step just reconciles the
+    partial sums (features AND the coordinate channel) across replicas."""
+    diff = x[dst] - x[src]                           # (E, 3)
+    dist2 = jnp.sum(jnp.square(diff), axis=-1, keepdims=True)
+    m = _mlp2(lp["phi_e"], jnp.concatenate(
+        [h[dst], h[src], dist2], axis=-1)) * emask
+    xw = jnp.tanh(_mlp2(lp["phi_x"], m))             # bounded for stability
+    return m, diff * xw * emask
+
+
 def egnn_apply(cfg: EGNNConfig, params, batch, *, n_graphs: int = 1):
     N = batch["nodes"].shape[0]
     src, dst = batch["edges"][:, 0], batch["edges"][:, 1]
@@ -215,13 +231,9 @@ def egnn_apply(cfg: EGNNConfig, params, batch, *, n_graphs: int = 1):
     x = batch["coords"].astype(h.dtype)
     deg = _seg_sum(batch["edge_mask"], dst, N)[:, None] + 1.0
     for lp in params["layers"]:
-        diff = x[dst] - x[src]                       # (E, 3)
-        dist2 = jnp.sum(jnp.square(diff), axis=-1, keepdims=True)
-        m = _mlp2(lp["phi_e"], jnp.concatenate(
-            [h[dst], h[src], dist2], axis=-1)) * emask
+        m, xmsg = egnn_layer_terms(lp, h, x, src, dst, emask)
         # coordinate update (equivariant)
-        xw = jnp.tanh(_mlp2(lp["phi_x"], m))         # bounded for stability
-        x = x + _seg_sum(diff * xw * emask, dst, N) / deg
+        x = x + _seg_sum(xmsg, dst, N) / deg
         # feature update
         agg = _seg_sum(m, dst, N)
         h = h + _mlp2(lp["phi_h"], jnp.concatenate([h, agg], axis=-1))

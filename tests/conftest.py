@@ -10,18 +10,24 @@ import pytest
 
 try:                                    # the image cannot pip install;
     import hypothesis                   # noqa: F401
+    HYPOTHESIS_BACKEND = "hypothesis"   # the real package wins when present
 except ImportError:                     # fall back to the deterministic stub
     from repro import _hypothesis_stub
     sys.modules["hypothesis"] = _hypothesis_stub
+    HYPOTHESIS_BACKEND = "repro._hypothesis_stub"
 
 # The multi-device SPMD checks spawn a subprocess with 8 emulated host
 # devices and recompile the whole step — minutes, not seconds.  They are
 # marked here (not in their files, which pin the public dist API verbatim)
 # so scripts/ci.sh can keep the fast loop under a minute with -m "not slow".
+# The host-grouped (multihost) ones additionally back the opt-in
+# `scripts/ci.sh --multihost` stage.
 _SLOW_SUBPROCESS_TESTS = {
     "test_spmd_train_step_matches_single_device",
     "test_partitioned_gin_matches_dense_reference",
     "test_partitioned_gatedgcn_matches_dense_reference",
+    "test_partitioned_egnn_matches_dense_reference",
+    "test_partitioned_gin_hostgrouped_matches_dense",
 }
 
 
@@ -29,6 +35,10 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.name.split("[")[0] in _SLOW_SUBPROCESS_TESTS:
             item.add_marker(pytest.mark.slow)
+
+
+def pytest_report_header(config):
+    return f"property-testing backend: {HYPOTHESIS_BACKEND}"
 
 
 @pytest.fixture(scope="session")

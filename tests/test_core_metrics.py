@@ -1,0 +1,99 @@
+"""Quality-metric invariants (paper §II-A) for every registered spec.
+
+The engine maintains quality incrementally (bit-matrix OR folds + running
+partition sizes); ``quality_from_assignment`` is the oracle path that
+recomputes everything from the final edge->partition assignment.  These
+tests pin the two paths to each other and to the paper's invariants:
+RF >= 1, partition sizes sum to |E|, and the ``capacity(|E|, k, alpha)``
+bound — hard (spec alpha) for the capacity-enforcing algorithms, and as
+the measured-balance consistency identity for every spec.
+"""
+import numpy as np
+import pytest
+
+import repro.core.bitops as bitops
+from repro.core import (InMemoryEdgeStream, SPEC_REGISTRY, capacity,
+                        quality_from_assignment, quality_from_bitmatrix,
+                        run_spec, spec_for)
+
+ALL_ALGOS = sorted(SPEC_REGISTRY)
+#: algorithms whose admission enforces the paper's hard per-partition cap
+CAPACITY_ENFORCING = ("2ps-hdrf", "2psl")
+V, K, CHUNK = 300, 8, 256
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(5)
+    e = rng.integers(0, V, (3000, 2)).astype(np.int32)
+    return e[e[:, 0] != e[:, 1]]
+
+
+@pytest.fixture(scope="module")
+def runs(graph):
+    """One engine run per registered spec, shared by every invariant."""
+    stream = InMemoryEdgeStream(graph, num_vertices=V)
+    return {name: run_spec(spec_for(name, chunk_size=CHUNK), stream, K)
+            for name in ALL_ALGOS}
+
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+def test_oracle_quality_matches_engine(name, graph, runs):
+    """The engine's incrementally-maintained quality must equal the oracle
+    recomputation from the assignment it returned."""
+    res = runs[name]
+    q = quality_from_assignment(graph, np.asarray(res.assignment), V, K)
+    assert q.replication_factor == res.quality.replication_factor
+    assert q.balance == res.quality.balance
+    assert q.num_vertices_covered == res.quality.num_vertices_covered
+    np.testing.assert_array_equal(q.part_sizes, res.quality.part_sizes)
+
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+def test_assignment_and_bitmatrix_paths_agree(name, graph, runs):
+    """``quality_from_assignment`` == ``quality_from_bitmatrix`` on the
+    same run, with the bit-matrix built independently here."""
+    asg = np.asarray(runs[name].assignment)
+    bm = bitops.alloc_np(V, K)
+    bitops.set_np(bm, graph[:, 0].astype(np.int64), asg)
+    bitops.set_np(bm, graph[:, 1].astype(np.int64), asg)
+    qa = quality_from_assignment(graph, asg, V, K)
+    qb = quality_from_bitmatrix(bm, np.bincount(asg, minlength=K),
+                                len(graph))
+    assert qa.replication_factor == qb.replication_factor
+    assert qa.balance == qb.balance
+    assert qa.num_vertices_covered == qb.num_vertices_covered
+    assert qa.max_partition == qb.max_partition
+    assert qa.min_partition == qb.min_partition
+    np.testing.assert_array_equal(qa.part_sizes, qb.part_sizes)
+
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+def test_quality_invariants(name, graph, runs):
+    """RF >= 1, conservation of edges, and the capacity identity: the
+    measured balance is exactly max/(|E|/k), so ``capacity`` evaluated at
+    it must bound every partition."""
+    q = runs[name].quality
+    assert q.replication_factor >= 1.0
+    assert int(q.part_sizes.sum()) == len(graph)
+    assert 0 <= q.min_partition <= q.max_partition
+    assert q.num_vertices_covered == len(np.unique(graph))
+    assert q.max_partition <= capacity(len(graph), K, q.balance)
+
+
+@pytest.mark.parametrize("name", CAPACITY_ENFORCING)
+def test_hard_capacity_bound(name, graph, runs):
+    """The paper's algorithms admit edges only up to
+    ``capacity(|E|, k, alpha)`` — the bound must hold with the SPEC's
+    alpha, not the measured one."""
+    spec = spec_for(name, chunk_size=CHUNK)
+    assert runs[name].quality.max_partition \
+        <= capacity(len(graph), K, spec.alpha)
+
+
+def test_hdrf_use_cap_enforces_capacity(graph):
+    """HDRF with ``use_cap=True`` must respect the same hard bound."""
+    stream = InMemoryEdgeStream(graph, num_vertices=V)
+    spec = spec_for("hdrf", chunk_size=CHUNK, use_cap=True)
+    res = run_spec(spec, stream, K)
+    assert res.quality.max_partition <= capacity(len(graph), K, spec.alpha)

@@ -1,9 +1,12 @@
 """Pipelined streaming engine: depth invariance, prefetching streams,
-on-device degree pass, Pallas scoring backend, out-of-core halo planning."""
+on-device degree pass, Pallas scoring backend, out-of-core halo planning,
+and property-based engine parity over fuzzed edge streams."""
 import dataclasses
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import (InMemoryEdgeStream, MemmapEdgeStream, SPEC_REGISTRY,
                         ThrottledEdgeStream, compute_degrees,
@@ -175,6 +178,62 @@ def test_spec_pipeline_fields_roundtrip():
         spec_for("hdrf", pipeline_depth=0)
     with pytest.raises(SpecError):
         spec_for("dbh", scoring_backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# property-based engine parity (real hypothesis when installed, else the
+# deterministic stub in repro._hypothesis_stub — same strategy API)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def engine_cases(draw):
+    """(edges, V, k, depth, chunk_size): a fuzzed edge stream plus engine
+    knobs.  The graph is materialized from a drawn seed, so the case is
+    fully determined by scalar draws (deterministic under the stub,
+    shrinkable under real hypothesis).  Chunk sizes are multiples of the
+    HDRF micro-batch so every spec accepts them, and small enough that the
+    stream spans several chunks plus a ragged tail."""
+    n_v = draw(st.integers(min_value=8, max_value=160))
+    n_e = draw(st.integers(min_value=64, max_value=1200))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n_v, (n_e, 2)).astype(np.int32)
+    e = e[e[:, 0] != e[:, 1]]
+    k = draw(st.sampled_from((2, 4, 8)))
+    depth = draw(st.sampled_from((2, 4)))
+    chunk = draw(st.sampled_from((256, 512)))
+    return e, n_v, k, depth, chunk
+
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+@settings(max_examples=4, deadline=None)
+@given(case=engine_cases())
+def test_engine_parity_fuzz(name, case):
+    """For every registered spec, fuzzed streams must produce bit-identical
+    assignments and quality across pipeline depths (1 vs the drawn depth)
+    AND across scoring backends where Pallas can run."""
+    edges, n_v, k, depth, chunk = case
+    if not len(edges):
+        return
+    stream = InMemoryEdgeStream(edges, num_vertices=n_v)
+    base = run_spec(spec_for(name, chunk_size=chunk, pipeline_depth=1),
+                    stream, k)
+    deep = run_spec(spec_for(name, chunk_size=chunk, pipeline_depth=depth),
+                    stream, k)
+    np.testing.assert_array_equal(
+        np.asarray(base.assignment), np.asarray(deep.assignment),
+        err_msg=f"{name} depth 1 vs {depth} (V={n_v} E={len(edges)} "
+                f"k={k} chunk={chunk})")
+    assert base.quality.replication_factor \
+        == deep.quality.replication_factor
+    assert base.quality.balance == deep.quality.balance
+    if resolve_scoring_backend("pallas") == "pallas":
+        pal = run_spec(spec_for(name, chunk_size=chunk,
+                                pipeline_depth=depth,
+                                scoring_backend="pallas"), stream, k)
+        np.testing.assert_array_equal(
+            np.asarray(base.assignment), np.asarray(pal.assignment),
+            err_msg=f"{name} jnp vs pallas backend")
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,23 @@
 """HaloPlan degenerate-input coverage: k=1, an empty partition, isolated
 vertices, and a quantile cap small enough to force the psum overflow lane.
 Every case must keep the two core invariants: (a) full edge coverage with
-correct local->global mapping, (b) send/recv pair symmetry."""
+correct local->global mapping, (b) send/recv pair symmetry.
+
+Host-grouped (``HostHaloPlan``) coverage: the streamed planner must stay
+bit-identical to the in-memory one for every layout including the
+degenerate 1-host and k-hosts groupings, a single host group must collapse
+exactly to the base plan, and a numpy emulation of the two-level exchange
+(intra-host pairwise + leader-aggregated DCN lanes + overflow psum) must
+reproduce the global per-vertex aggregate."""
+import dataclasses
+
 import numpy as np
 import pytest
 
-from repro.dist.partitioned_gnn import plan_capacities, plan_halo_exchange
+from repro.core import InMemoryEdgeStream
+from repro.dist.multihost import host_plan_from_halo, normalize_host_groups
+from repro.dist.partitioned_gnn import (plan_capacities, plan_halo_exchange,
+                                        plan_halo_exchange_stream)
 
 
 def _graph(seed=0, V=60, E=400):
@@ -114,3 +126,174 @@ def test_quantile_cap_forces_overflow(quantile):
     # capacities agree with the materialized plan
     caps = plan_capacities(edges, asg, V, k, pair_cap_quantile=quantile)
     assert caps["b_cap"] == plan.b_cap and caps["o_cap"] == plan.o_cap
+
+
+# ---------------------------------------------------------------------------
+# host-grouped (multi-host) layout
+# ---------------------------------------------------------------------------
+
+def _host_case(seed=6, V=70, E=500, k=8):
+    edges = _graph(seed=seed, V=V, E=E)
+    V = int(edges.max()) + 1
+    rng = np.random.default_rng(seed + 100)
+    asg = rng.integers(0, k, len(edges)).astype(np.int64)
+    return edges, asg, V, k
+
+
+def _assert_host_plans_equal(a, b):
+    for f in dataclasses.fields(a):
+        if f.name == "base":
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            assert va.dtype == vb.dtype, f.name
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, f.name
+    for f in dataclasses.fields(a.base):
+        va, vb = getattr(a.base, f.name), getattr(b.base, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f"base.{f.name}")
+        else:
+            assert va == vb, f"base.{f.name}"
+
+
+def test_normalize_host_groups_validation():
+    assert normalize_host_groups(8, 2) == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert normalize_host_groups(4, ((0, 1), (2, 3))) == ((0, 1), (2, 3))
+    with pytest.raises(ValueError):
+        normalize_host_groups(8, 3)                 # does not divide k
+    with pytest.raises(ValueError):
+        normalize_host_groups(4, ((0, 2), (1, 3)))  # not contiguous
+    with pytest.raises(ValueError):
+        normalize_host_groups(4, ((0,), (1, 2, 3)))  # unequal sizes
+    with pytest.raises(ValueError):
+        normalize_host_groups(4, ((0, 1), (2, 2)))  # not a partition
+
+
+@pytest.mark.parametrize("hosts", [1, 2, 4, 8])     # 1-host and k-hosts too
+def test_host_plan_stream_vs_memory_bit_identical(hosts):
+    """`plan_halo_exchange_stream(host_groups=...)` must match the
+    in-memory planner bit for bit on every layout."""
+    edges, asg, V, k = _host_case()
+    mem = plan_halo_exchange(edges, asg, V, k, host_groups=hosts)
+    ooc = plan_halo_exchange_stream(
+        InMemoryEdgeStream(edges, num_vertices=V), asg, V, k,
+        chunk_size=123, host_groups=hosts)
+    _assert_host_plans_equal(mem, ooc)
+
+
+def test_single_host_group_collapses_to_base_plan():
+    """Acceptance criterion: one host group == today's HaloPlan exactly,
+    with empty DCN lanes and the full pair tables as the intra level."""
+    edges, asg, V, k = _host_case()
+    plain = plan_halo_exchange(edges, asg, V, k)
+    hp = plan_halo_exchange(edges, asg, V, k, host_groups=1)
+    for f in dataclasses.fields(plain):
+        va, vb = getattr(plain, f.name), getattr(hp.base, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, f.name
+    np.testing.assert_array_equal(hp.intra_send, plain.send_idx)
+    np.testing.assert_array_equal(hp.intra_recv, plain.recv_idx)
+    assert hp.num_hosts == 1 and hp.hb_cap == 0
+    assert (hp.hsend_idx.size == 0 or (hp.hsend_idx < 0).all())
+
+
+@pytest.mark.parametrize("hosts,quantile", [(2, 1.0), (4, 1.0), (2, 0.4)])
+def test_host_plan_table_invariants(hosts, quantile):
+    """Leader uniqueness (each DCN lane row has exactly one sender in the
+    source host), receiver coverage (>= 1 holder in the destination host),
+    symmetric aggregated lane sizes, and intra tables == the same-host
+    slice of the base pair tables."""
+    edges, asg, V, k = _host_case(seed=9)
+    hp = plan_halo_exchange(edges, asg, V, k, pair_cap_quantile=quantile,
+                            host_groups=hosts)
+    h, d = hp.num_hosts, hp.parts_per_host
+    np.testing.assert_array_equal(hp.host_of, np.repeat(np.arange(h), d))
+    np.testing.assert_array_equal(hp.host_pair_sizes,
+                                  hp.host_pair_sizes.T)
+    for p in range(k):
+        lo = (p // d) * d
+        np.testing.assert_array_equal(hp.intra_send[p],
+                                      hp.base.send_idx[p, lo:lo + d])
+        np.testing.assert_array_equal(hp.intra_recv[p],
+                                      hp.base.recv_idx[p, lo:lo + d])
+    for a in range(h):
+        rows = slice(a * d, (a + 1) * d)
+        for b in range(h):
+            n = int(hp.host_pair_sizes[a, b])
+            assert n <= hp.hb_cap
+            senders = (hp.hsend_idx[rows, b] >= 0).sum(axis=0)
+            receivers = (hp.hrecv_idx[rows, b] >= 0).sum(axis=0)
+            if a == b:
+                assert n == 0 and not senders.any()
+                continue
+            # lane (a -> b): slots [0, n) have exactly one leader in a
+            np.testing.assert_array_equal(
+                senders, (np.arange(hp.hb_cap) < n).astype(senders.dtype))
+            # lane (b -> a) (same slots, symmetry): >= 1 holder in a
+            m = int(hp.host_pair_sizes[b, a])
+            assert (receivers[:m] >= 1).all() and not receivers[m:].any()
+
+
+@pytest.mark.parametrize("hosts,quantile", [(1, 1.0), (2, 1.0), (4, 0.4),
+                                            (8, 1.0)])
+def test_host_exchange_simulation_matches_global(hosts, quantile):
+    """Numpy emulation of the two-level exchange over the plan tables:
+    every replica must end up with the global per-vertex aggregate, for
+    1-host, multi-host, k-hosts, and overflow-lane layouts alike."""
+    edges, asg, V, k = _host_case(seed=12)
+    hp = plan_halo_exchange(edges, asg, V, k, pair_cap_quantile=quantile,
+                            host_groups=hosts)
+    h, d = hp.num_hosts, hp.parts_per_host
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((k, hp.v_cap, 5))
+    x *= hp.base.node_mask[..., None]
+
+    truth = np.zeros((V, 5))
+    for p in range(k):
+        vm = hp.vmap_global[p]
+        ok = vm >= 0
+        np.add.at(truth, vm[ok], x[p, ok])
+
+    y = x.copy()
+    ov, o_cap = hp.base.ov_idx, hp.o_cap
+    if o_cap:                       # overflow partials gathered before adds
+        ov_tot = np.zeros((o_cap, 5))
+        for p in range(k):
+            held = ov[p] >= 0
+            ov_tot[held] += x[p, ov[p][held]]
+    add = np.zeros_like(x)          # level 1: intra-host pairwise
+    for p in range(k):
+        lo = (p // d) * d
+        for j in range(d):
+            s = hp.intra_send[lo + j, p - lo]       # peer j's lane -> p
+            r = hp.intra_recv[p, j]
+            add[p, r[r >= 0]] += x[lo + j, s[s >= 0]]
+    y = y + add
+    if h > 1 and hp.hb_cap:         # level 2: aggregated DCN lanes
+        lane = np.zeros((h, h, hp.hb_cap, 5))
+        for p in range(k):
+            a = p // d
+            for b in range(h):
+                s = hp.hsend_idx[p, b]
+                lane[a, b, s >= 0] += y[p, s[s >= 0]]
+        add = np.zeros_like(y)
+        for p in range(k):
+            a = p // d
+            for b in range(h):
+                r = hp.hrecv_idx[p, b]
+                add[p, r[r >= 0]] += lane[b, a, r >= 0]
+        y = y + add
+    if o_cap:
+        for p in range(k):
+            held = ov[p] >= 0
+            y[p, ov[p][held]] = ov_tot[held]
+
+    for p in range(k):
+        vm = hp.vmap_global[p]
+        ok = vm >= 0
+        np.testing.assert_allclose(y[p, ok], truth[vm[ok]], atol=1e-9,
+                                   err_msg=f"hosts={hosts} p={p}")
