@@ -20,6 +20,15 @@ picks it up automatically from the artifact.  The report below shows the
 DCN rows the aggregation saves on this graph.  Models: GIN, GatedGCN, and
 EGNN (``make_partitioned_egnn_step``), whose coordinate channel rides the
 same combine.
+
+Host-AWARE partitioning goes one step further: ``spec_for("2psl",
+host_groups=H, dcn_penalty=P)`` (CLI: ``--hosts H --dcn-penalty P``)
+feeds the host layout into the scoring pass itself, so candidates that
+would open a new DCN lane for a vertex pay P per missing endpoint —
+the lanes shrink at partition time instead of only being aggregated
+afterward.  The demo below verifies the reduction end-to-end: cross-host
+replication factor AND aggregated DCN rows strictly below flat 2PS-L at
+equal k, with balance still inside the spec's capacity bound.
 """
 import time
 
@@ -27,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import InMemoryEdgeStream, run_spec, spec_for
+from repro.core import InMemoryEdgeStream, capacity, run_spec, spec_for
 from repro.core.integration import build_device_shards, comm_volume_per_layer
 from repro.data.gnn_batches import full_graph_batch
 from repro.dist.multihost import host_plan_from_halo
@@ -78,7 +87,30 @@ def main():
     print(f"2 hosts: aggregated DCN lanes ship "
           f"{dcn['dcn_rows_aggregated']} rows/layer vs "
           f"{dcn['dcn_rows_naive']} pairwise "
-          f"({dcn['dcn_aggregation_ratio']:.2f}x less DCN traffic)\n")
+          f"({dcn['dcn_aggregation_ratio']:.2f}x less DCN traffic)")
+
+    # ---- host-AWARE 2PS-L: shrink those lanes at partition time ----
+    hosted_spec = spec_for("2psl", chunk_size=1 << 14, host_groups=2,
+                           dcn_penalty=1.0)
+    hosted = run_spec(hosted_spec, stream, k)
+    hosted_dcn = host_plan_from_halo(
+        plan_halo_exchange(edges, np.asarray(hosted.assignment),
+                           stream.num_vertices, k),
+        host_groups=2).dcn_summary()
+    print(f"host-aware 2PS-L (dcn_penalty={hosted_spec.dcn_penalty}): "
+          f"cross-host rf {dcn['cross_host_rf']:.4f} -> "
+          f"{hosted_dcn['cross_host_rf']:.4f}, DCN rows/layer "
+          f"{dcn['dcn_rows_aggregated']} -> "
+          f"{hosted_dcn['dcn_rows_aggregated']}, "
+          f"alpha={hosted.quality.balance:.3f}")
+    assert hosted_dcn["cross_host_rf"] < dcn["cross_host_rf"], \
+        "host-aware scoring failed to reduce cross-host replication"
+    assert (hosted_dcn["dcn_rows_aggregated"]
+            < dcn["dcn_rows_aggregated"]), \
+        "host-aware scoring failed to shrink the DCN lanes"
+    assert hosted.quality.max_partition <= capacity(
+        stream.num_edges, k, hosted_spec.alpha), "capacity bound violated"
+    print()
 
     # ---- train the GIN on the (2PS-L partitioned) graph ----
     cfg = GINConfig(name="gin", d_in=d_feat, n_classes=n_classes)

@@ -82,6 +82,11 @@ print(f"bench smoke OK: geomean {s['geomean_best_speedup']}x over the "
       f"synchronous engine (tiny graph — schema check, not a perf gate)")
 PY
 
+# ---- docs stage: README.md + docs/*.md must exist and their '# doc-test'
+# tagged fenced python blocks must execute (examples cannot rot) ----------
+python scripts/doc_tests.py
+echo "docs stage OK"
+
 # ---- multihost stage (opt-in): host-grouped SPMD parity in subprocesses
 # with 8 emulated host devices — minutes, so never part of the fast loop.
 # --full already runs every slow test, so the stage would only duplicate

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Execute the documentation's tagged code examples so they cannot rot.
+
+Scans README.md and docs/*.md for fenced ```python blocks whose FIRST
+line is exactly ``# doc-test`` and executes each in a fresh namespace
+(repo root as cwd, so ``PYTHONPATH=src`` resolves the package).  Any
+exception — including a failing ``assert`` inside an example — fails the
+run and points at the file + fence line.
+
+    PYTHONPATH=src python scripts/doc_tests.py [files...]
+
+With no arguments, the default document set is checked; it is an error
+for a default document to be missing or to contain no tagged blocks
+(README.md and docs/*.md are required to carry executable examples).
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+TAG = "# doc-test"
+_FENCE = re.compile(r"^```python[ \t]*$")
+
+
+def extract_blocks(path: Path) -> list[tuple[int, str]]:
+    """-> [(1-based line of the opening fence, source)] for tagged blocks."""
+    blocks = []
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        if _FENCE.match(lines[i]):
+            start = i
+            i += 1
+            body = []
+            while i < len(lines) and lines[i].rstrip() != "```":
+                body.append(lines[i])
+                i += 1
+            if i >= len(lines):
+                raise SystemExit(f"{path}:{start + 1}: unterminated "
+                                 f"```python fence")
+            if body and body[0].strip() == TAG:
+                blocks.append((start + 1, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def run_block(path: Path, lineno: int, source: str) -> float:
+    code = compile(source, f"{path}:{lineno}", "exec")
+    t0 = time.perf_counter()
+    exec(code, {"__name__": f"doctest_{path.stem}_{lineno}"})
+    return time.perf_counter() - t0
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        docs = [Path(a) for a in argv]
+    else:
+        docs = [REPO_ROOT / "README.md"]
+        docs += sorted((REPO_ROOT / "docs").glob("*.md"))
+        if len(docs) < 2:
+            print("FAIL: docs/*.md missing — the documentation suite "
+                  "requires docs/ to exist", file=sys.stderr)
+            return 1
+    failures = total = 0
+    for doc in docs:
+        if not doc.exists():
+            print(f"FAIL: {doc} does not exist", file=sys.stderr)
+            failures += 1
+            continue
+        blocks = extract_blocks(doc)
+        if not blocks and not argv:
+            print(f"FAIL: {doc} has no '{TAG}' tagged python blocks",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        for lineno, source in blocks:
+            total += 1
+            try:
+                dt = run_block(doc, lineno, source)
+                print(f"ok   {doc.relative_to(REPO_ROOT)}:{lineno} "
+                      f"({dt:.1f}s)")
+            except Exception as e:   # noqa: BLE001 - report and count
+                failures += 1
+                print(f"FAIL {doc.relative_to(REPO_ROOT)}:{lineno}: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+    print(f"doc-tests: {total - failures}/{total} blocks passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

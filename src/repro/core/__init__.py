@@ -12,8 +12,9 @@ from .engine import (PartitionRunResult, StreamingPartitioner, StreamPass,
                      build_partitioner, compute_degrees_streaming, run_spec)
 from .scoring import resolve_scoring_backend
 from .mapping import map_clusters_lpt, map_clusters_lpt_jax
-from .metrics import (PartitionQuality, capacity, quality_from_assignment,
-                      quality_from_bitmatrix)
+from .metrics import (PartitionQuality, capacity, cross_host_replicas,
+                      cross_host_replication_factor, host_assignment,
+                      quality_from_assignment, quality_from_bitmatrix)
 from .pipeline import (PARTITIONERS, run_2ps_hdrf, run_2psl, run_dbh,
                        run_greedy, run_grid, run_hdrf, run_partitioner,
                        run_random)
@@ -27,7 +28,9 @@ __all__ = [
     "ClusteringResult", "cluster_in_memory_scan", "cluster_sequential",
     "default_max_vol", "streaming_clustering", "map_clusters_lpt",
     "map_clusters_lpt_jax", "PartitionQuality", "capacity",
-    "quality_from_assignment", "quality_from_bitmatrix", "PARTITIONERS",
+    "quality_from_assignment", "quality_from_bitmatrix",
+    "cross_host_replicas", "cross_host_replication_factor",
+    "host_assignment", "PARTITIONERS",
     "PartitionRunResult", "run_2ps_hdrf", "run_2psl", "run_dbh",
     "run_greedy", "run_grid",
     "run_hdrf", "run_partitioner", "run_random", "BYTES_PER_EDGE",

@@ -232,6 +232,16 @@ class PartitionArtifact:
 
     @classmethod
     def load(cls, path: str) -> "PartitionArtifact":
+        """Open a persisted artifact (lazy: the assignment memmaps on
+        first access, plans rebuild from their ``.npz`` on first call).
+
+        Example::
+
+            art = PartitionArtifact.load("parts/")
+            art.spec.algorithm        # exactly how it was produced
+            art.assignment[:10]       # (E,) int32, no graph IO
+            art.halo_plan()           # cached HaloPlan, no graph IO
+        """
         with open(os.path.join(path, MANIFEST_FILE)) as f:
             manifest = json.load(f)
         version = manifest.get("format_version")

@@ -74,15 +74,25 @@ import numpy as np
 from . import bitops, partitioning as P
 from .clustering import streaming_clustering
 from .mapping import map_clusters_lpt
-from .metrics import PartitionQuality, capacity, quality_from_bitmatrix
+from .metrics import (PartitionQuality, capacity,
+                      cross_host_replication_factor, host_assignment,
+                      quality_from_bitmatrix)
 from .scoring import resolve_scoring_backend
-from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, StatelessSpec,
-                    TwoPSLSpec)
+from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, SpecError,
+                    StatelessSpec, TwoPSLSpec)
 from .stream import EdgeStream
 
 
 @dataclass
 class PartitionRunResult:
+    """Everything ``run_spec`` produces for one partitioning run: the
+    per-edge assignment (plain array, or the ``out_path`` memmap), the
+    incrementally-maintained ``PartitionQuality``, per-phase wall-clock
+    ``timings``, and algorithm ``extras`` (2PS-L: pre-partition ratio,
+    cluster stats; any spec with ``host_groups``: ``num_hosts`` /
+    ``dcn_penalty`` / ``cross_host_rf``).  ``spec`` rides along so
+    ``PartitionArtifact.save`` can embed the exact configuration."""
+
     name: str
     k: int
     alpha: float
@@ -167,6 +177,20 @@ class StreamingPartitioner:
 
     display_name: str = ""
 
+    def _init_hierarchy(self, k: int):
+        """Resolve the spec's ``host_groups``/``dcn_penalty`` against the
+        run's k: sets ``self.num_hosts`` (0 when flat) and ``self.hosted``
+        (True only when the penalty actually changes scoring — H >= 2 and
+        ``dcn_penalty`` > 0; a single host group has no DCN to shrink)."""
+        hg = getattr(self.spec, "host_groups", None)
+        self.num_hosts = int(hg) if hg else 0
+        if self.num_hosts and k % self.num_hosts:
+            raise SpecError(
+                f"host_groups={self.num_hosts} must divide k={k} (the mesh "
+                f"places partition p on host p // (k/H))")
+        self.hosted = (self.num_hosts >= 2
+                       and getattr(self.spec, "dcn_penalty", 0.0) > 0)
+
     def init_state(self, stream: EdgeStream, k: int, timer: _Timer,
                    degrees: np.ndarray | None) -> dict:
         raise NotImplementedError
@@ -193,6 +217,13 @@ class _TwoPSLPartitioner(StreamingPartitioner):
         sp = self.spec
         self.k, self.cap = k, capacity(stream.num_edges, k, sp.alpha)
         self._num_edges = stream.num_edges
+        self._init_hierarchy(k)
+        # the 2-candidate scorer gathers host presence from an O(|V|*H)-bit
+        # per-HOST replica matrix (the k-way 2PS-HDRF scorer derives it
+        # from the replica matrices it gathers anyway)
+        self._track_hbits = self.hosted and sp.scoring == "2psl"
+        if self.num_hosts:
+            self._host_of_np = host_assignment(k, self.num_hosts)
         if degrees is None:
             degrees = compute_degrees_streaming(
                 stream, sp.chunk_size, readahead=sp.pipeline_depth - 1)
@@ -209,13 +240,19 @@ class _TwoPSLPartitioner(StreamingPartitioner):
         # pre-partitioning only WRITES replication state -> fold it on the
         # host in the writeback stage; the scoring pass uploads it once.
         self._bits_np = bitops.alloc_np(stream.num_vertices, k)
-        return {
+        if self._track_hbits:
+            self._hbits_np = bitops.alloc_np(stream.num_vertices,
+                                             self.num_hosts)
+        st = {
             "sizes": jnp.zeros((k,), jnp.int32),
             "d": jnp.asarray(degrees, jnp.int32),
             "vol": jnp.asarray(clus.vol, jnp.int32),
             "v2c": jnp.asarray(clus.v2c, jnp.int32),
             "c2p": jnp.asarray(c2p, jnp.int32),
         }
+        if self._track_hbits:
+            st["host_of"] = jnp.asarray(self._host_of_np)
+        return st
 
     def passes(self):
         return [StreamPass("prepartition", self._prepartition,
@@ -234,12 +271,28 @@ class _TwoPSLPartitioner(StreamingPartitioner):
         p = asg[m]
         bitops.set_np(self._bits_np, chunk[m, 0], p)
         bitops.set_np(self._bits_np, chunk[m, 1], p)
+        if self._track_hbits:
+            h = self._host_of_np[p]
+            bitops.set_np(self._hbits_np, chunk[m, 0], h)
+            bitops.set_np(self._hbits_np, chunk[m, 1], h)
 
     def _upload_bits(self, st):
-        return {**st, "bits": jnp.asarray(self._bits_np)}
+        st = {**st, "bits": jnp.asarray(self._bits_np)}
+        if self._track_hbits:
+            st["hbits"] = jnp.asarray(self._hbits_np)
+        return st
 
     def _score(self, st, pc):
         if self.spec.scoring == "2psl":
+            if self.hosted:
+                bits, hbits, sizes, asg = P._score_chunk_hosted(
+                    st["bits"], st["hbits"], st["sizes"], st["d"],
+                    st["vol"], st["v2c"], st["c2p"], st["host_of"],
+                    pc.edges, pc.valid, k=self.k, cap=self.cap,
+                    dcn_penalty=self.spec.dcn_penalty,
+                    backend=self.backend)
+                return {**st, "bits": bits, "hbits": hbits,
+                        "sizes": sizes}, asg
             bits, sizes, asg = P._score_chunk(
                 st["bits"], st["sizes"], st["d"], st["vol"], st["v2c"],
                 st["c2p"], pc.edges, pc.valid, k=self.k, cap=self.cap,
@@ -248,7 +301,9 @@ class _TwoPSLPartitioner(StreamingPartitioner):
             bits, sizes, asg = P._hdrf_remaining_chunk(
                 st["bits"], st["sizes"], st["d"], st["v2c"], st["c2p"],
                 pc.edges, pc.valid, k=self.k, cap=self.cap,
-                lam=self.spec.hdrf_lambda, backend=self.backend)
+                lam=self.spec.hdrf_lambda, backend=self.backend,
+                num_hosts=self.num_hosts if self.hosted else 0,
+                dcn_penalty=self.spec.dcn_penalty if self.hosted else 0.0)
         return {**st, "bits": bits, "sizes": sizes}, asg
 
     def finalize(self, state, pass_counts):
@@ -276,6 +331,7 @@ class _HDRFPartitioner(StreamingPartitioner):
     def init_state(self, stream, k, timer, degrees):
         self.k = k
         self.cap = capacity(stream.num_edges, k, self.spec.alpha)
+        self._init_hierarchy(k)
         return {
             "bits": bitops.alloc_jnp(stream.num_vertices, k),
             "sizes": jnp.zeros((k,), jnp.int32),
@@ -291,7 +347,9 @@ class _HDRFPartitioner(StreamingPartitioner):
         bits, sizes, dpart, asg = P._hdrf_chunk(
             st["bits"], st["sizes"], st["dpart"], pc.edges, pc.valid,
             k=self.k, cap=self.cap, lam=sp.lam, use_cap=sp.use_cap,
-            degree_weighted=sp.degree_weighted, backend=self.backend)
+            degree_weighted=sp.degree_weighted, backend=self.backend,
+            num_hosts=self.num_hosts if self.hosted else 0,
+            dcn_penalty=sp.dcn_penalty if self.hosted else 0.0)
         return {"bits": bits, "sizes": sizes, "dpart": dpart}, asg
 
 
@@ -309,6 +367,8 @@ class _HashPartitioner(StreamingPartitioner):
 
     def init_state(self, stream, k, timer, degrees):
         self.k = k
+        self._init_hierarchy(k)   # hashes never score, but host_groups
+        #                           still gates the cross-host RF metric
         self._bits_np = bitops.alloc_np(stream.num_vertices, k)
         self._sizes_np = np.zeros((k,), np.int64)
         return {}
@@ -406,6 +466,18 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
     ``out_path`` writes the assignment as an int32 memmap instead of an
     in-memory array; ``degrees`` short-circuits the upfront degree pass for
     algorithms that need one (2PS-L family, DBH).
+
+    When the spec sets ``host_groups`` the result's ``extras`` carry the
+    hierarchy-aware quality (``cross_host_rf`` — see ``repro.core.metrics``)
+    next to the flat ``PartitionQuality``; a nonzero ``dcn_penalty``
+    additionally steers the scoring passes themselves (stateful specs).
+
+    Example::
+
+        stream = InMemoryEdgeStream(edges)
+        res = run_spec(spec_for("2psl", chunk_size=1 << 14), stream, k=32)
+        res.quality.replication_factor   # the paper's RF
+        res.timings                      # {'degrees': ..., 'scoring': ...}
     """
     part = build_partitioner(spec)
     timer = _Timer()
@@ -456,8 +528,16 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
 
     bits, sizes, extras = part.finalize(state, pass_counts)
     sizes_np = np.asarray(sizes)
-    quality = quality_from_bitmatrix(np.asarray(bits), sizes_np,
-                                     stream.num_edges)
+    bits_np = np.asarray(bits)
+    quality = quality_from_bitmatrix(bits_np, sizes_np, stream.num_edges)
+    if getattr(part, "num_hosts", 0):
+        # hierarchy-aware quality: how many host groups each vertex spans
+        # (== the DCN synchronization volume a host-grouped halo exchange
+        # would pay for this assignment)
+        extras["num_hosts"] = part.num_hosts
+        extras["dcn_penalty"] = float(getattr(spec, "dcn_penalty", 0.0))
+        extras["cross_host_rf"] = cross_host_replication_factor(
+            bits_np, k, part.num_hosts)
     return PartitionRunResult(
         name=part.display_name, k=k, alpha=spec.alpha,
         assignment=assignment, quality=quality, timings=timer.t,

@@ -29,7 +29,7 @@ import numpy as np
 
 from . import bitops
 from .hashing import hash_mod_jnp
-from .scoring import twopsl_score, hdrf_score
+from .scoring import twopsl_score, hdrf_score, host_any
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +94,33 @@ def _apply_bits(bits, edges, assignment):
     return bitops.set_jnp(bits, vv, jnp.clip(pp, 0, None), mask=mm)
 
 
+def _apply_host_bits(hbits, edges, assignment, host_of):
+    """Fold the per-HOST replica matrix: the same OR as ``_apply_bits`` but
+    with the assignment mapped through ``host_of`` (partition -> host)."""
+    hasg = jnp.where(assignment >= 0,
+                     host_of[jnp.clip(assignment, 0, None)], jnp.int32(-1))
+    return _apply_bits(hbits, edges, hasg)
+
+
+def _admit_with_fallback(sizes, chosen, todo, du, dv, u, v, k, cap):
+    """The paper's shared admission tail: capacity-ranked admission of the
+    chosen partition, then the overflow chain (max-degree hash ->
+    least-loaded last resort, Alg. 2 line 22-23 + prose).  Returns
+    ``(assignment, sizes)`` with every ``todo`` edge placed."""
+    ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
+    assignment = jnp.where(ok, chosen, jnp.int32(-1))
+
+    over = todo & ~ok
+    hi = jnp.where(du >= dv, u, v)
+    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
+    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
+    assignment = jnp.where(ok2, t2, assignment)
+
+    still = over & ~ok2
+    assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
+    return assignment, sizes
+
+
 # ---------------------------------------------------------------------------
 # Step 2: pre-partitioning
 # ---------------------------------------------------------------------------
@@ -117,19 +144,8 @@ def _prepartition_core(sizes, d, v2c, c2p, edges, valid, *, k, cap):
     eligible = valid & ((cu == cv) | (pu == pv))
     target = pu
 
-    ok, sizes = _ranked_admit(target, eligible, sizes, cap, k)
-    assignment = jnp.where(ok, target, jnp.int32(-1))
-
-    # overflow chain (paper Alg. 2 line 22-23 + prose): degree hash ...
-    over = eligible & ~ok
-    hi = jnp.where(d[u] >= d[v], u, v)
-    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
-    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
-    assignment = jnp.where(ok2, t2, assignment)
-
-    # ... then least-loaded as last resort.
-    still = over & ~ok2
-    assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
+    assignment, sizes = _admit_with_fallback(sizes, target, eligible,
+                                             d[u], d[v], u, v, k, cap)
 
     remaining = valid & ~eligible
     return sizes, assignment, remaining
@@ -152,6 +168,57 @@ def _prepartition_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap):
 # Step 3: linear-time 2-candidate scoring
 # ---------------------------------------------------------------------------
 
+def _twopsl_choose(bits, d, vol, v2c, c2p, edges, valid, *, backend,
+                   hbits=None, host_of=None, dcn_penalty: float = 0.0):
+    """The paper's two-candidate chooser, shared by the flat and the
+    host-aware scoring chunks: gather per-edge operands, score the two
+    cluster partitions (jnp or the fused Pallas kernel), pick the better.
+
+    Returns ``(todo, chosen, du, dv, u, v)`` for the admission tail.  When
+    ``dcn_penalty`` != 0, the per-HOST replica matrix ``hbits`` +
+    ``host_of`` feed the locality term (``scoring.host_affinity_penalty``)
+    into both backends; with 0 the flat expression is traced unchanged."""
+    u, v = edges[:, 0], edges[:, 1]
+    cu, cv = v2c[u], v2c[v]
+    pu, pv = c2p[cu], c2p[cv]
+    skip = (cu == cv) | (pu == pv)        # pre-partitioned in step 2
+    todo = valid & ~skip
+
+    du, dv = d[u], d[v]
+    vol_u, vol_v = vol[cu], vol[cv]
+
+    def hrep(vertex, p):
+        return bitops.get_jnp(hbits, vertex, host_of[p])
+
+    if backend == "pallas":
+        from repro.kernels.edge_score import edge_score_choose
+        host_kw = {}
+        if dcn_penalty:
+            host_kw = dict(hrep_u1=hrep(u, pu), hrep_v1=hrep(v, pu),
+                           hrep_u2=hrep(u, pv), hrep_v2=hrep(v, pv),
+                           dcn_penalty=dcn_penalty)
+        chosen, _ = edge_score_choose(
+            du, dv, vol_u, vol_v,
+            bitops.get_jnp(bits, u, pu), bitops.get_jnp(bits, v, pu),
+            bitops.get_jnp(bits, u, pv), bitops.get_jnp(bits, v, pv),
+            pu, pv, **host_kw)
+    else:
+        def score_for(p):
+            rep_u = bitops.get_jnp(bits, u, p)
+            rep_v = bitops.get_jnp(bits, v, p)
+            host_kw = {}
+            if dcn_penalty:
+                host_kw = dict(hrep_u=hrep(u, p), hrep_v=hrep(v, p),
+                               dcn_penalty=dcn_penalty)
+            return twopsl_score(du, dv, vol_u, vol_v, rep_u, rep_v,
+                                pu == p, pv == p, **host_kw)
+
+        s1 = score_for(pu)
+        s2 = score_for(pv)
+        chosen = jnp.where(s2 > s1, pv, pu)   # first candidate wins ties
+    return todo, chosen, du, dv, u, v
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "backend"),
                    donate_argnums=(0, 1))
@@ -165,47 +232,33 @@ def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap,
     operands instead of XLA materializing each score term); everything
     around it — gathers, capacity admission, overflow chain, bits fold —
     is shared."""
-    u, v = edges[:, 0], edges[:, 1]
-    cu, cv = v2c[u], v2c[v]
-    pu, pv = c2p[cu], c2p[cv]
-    skip = (cu == cv) | (pu == pv)        # pre-partitioned in step 2
-    todo = valid & ~skip
-
-    du, dv = d[u], d[v]
-    vol_u, vol_v = vol[cu], vol[cv]
-
-    if backend == "pallas":
-        from repro.kernels.edge_score import edge_score_choose
-        chosen, _ = edge_score_choose(
-            du, dv, vol_u, vol_v,
-            bitops.get_jnp(bits, u, pu), bitops.get_jnp(bits, v, pu),
-            bitops.get_jnp(bits, u, pv), bitops.get_jnp(bits, v, pv),
-            pu, pv)
-    else:
-        def score_for(p):
-            rep_u = bitops.get_jnp(bits, u, p)
-            rep_v = bitops.get_jnp(bits, v, p)
-            return twopsl_score(du, dv, vol_u, vol_v, rep_u, rep_v,
-                                pu == p, pv == p)
-
-        s1 = score_for(pu)
-        s2 = score_for(pv)
-        chosen = jnp.where(s2 > s1, pv, pu)   # first candidate wins ties
-
-    ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
-    assignment = jnp.where(ok, chosen, jnp.int32(-1))
-
-    over = todo & ~ok
-    hi = jnp.where(du >= dv, u, v)        # paper line 41: hash the max-degree
-    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
-    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
-    assignment = jnp.where(ok2, t2, assignment)
-
-    still = over & ~ok2
-    assignment, sizes = _least_loaded_rounds(assignment, still, sizes, cap, k)
-
+    todo, chosen, du, dv, u, v = _twopsl_choose(
+        bits, d, vol, v2c, c2p, edges, valid, backend=backend)
+    assignment, sizes = _admit_with_fallback(sizes, chosen, todo,
+                                             du, dv, u, v, k, cap)
     bits = _apply_bits(bits, edges, assignment)
     return bits, sizes, assignment
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "backend", "dcn_penalty"),
+                   donate_argnums=(0, 1, 2))
+def _score_chunk_hosted(bits, hbits, sizes, d, vol, v2c, c2p, host_of,
+                        edges, valid, *, k, cap, dcn_penalty: float,
+                        backend: str = "jnp"):
+    """Host-aware 2PS-L scoring: ``_score_chunk`` plus the DCN locality
+    term.  The O(|V|*H)-bit per-HOST replica matrix ``hbits`` rides along
+    so host presence is one O(1) bit gather per candidate — the scoring
+    pass stays O(|E|), never O(|E|*k).  Both replica matrices fold the
+    chunk's assignments before the next chunk reads them."""
+    todo, chosen, du, dv, u, v = _twopsl_choose(
+        bits, d, vol, v2c, c2p, edges, valid, backend=backend,
+        hbits=hbits, host_of=host_of, dcn_penalty=dcn_penalty)
+    assignment, sizes = _admit_with_fallback(sizes, chosen, todo,
+                                             du, dv, u, v, k, cap)
+    bits = _apply_bits(bits, edges, assignment)
+    hbits = _apply_host_bits(hbits, edges, assignment, host_of)
+    return bits, hbits, sizes, assignment
 
 
 # ---------------------------------------------------------------------------
@@ -214,11 +267,13 @@ def _score_chunk(bits, sizes, d, vol, v2c, c2p, edges, valid, *, k, cap,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "lam", "use_cap", "sub",
-                                    "degree_weighted", "backend"),
+                                    "degree_weighted", "backend",
+                                    "num_hosts", "dcn_penalty"),
                    donate_argnums=(0, 1, 2))
 def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
                 sub: int = 64, degree_weighted: bool = True,
-                backend: str = "jnp"):
+                backend: str = "jnp", num_hosts: int = 0,
+                dcn_penalty: float = 0.0):
     """HDRF: score EVERY partition for every edge — the O(|E|*k) cost the
     paper eliminates.  Uses HDRF's own streamed partial degrees.
 
@@ -231,9 +286,15 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
     with the ``repro.kernels.hdrf_score`` lane-parallel kernel (only for
     the degree-weighted variant — the kernel hard-codes HDRF's degree
     preference; Greedy always uses the jnp path).
+
+    ``dcn_penalty`` != 0 (with ``num_hosts`` >= 2 dividing k) subtracts the
+    host-affinity penalty from every candidate; the k-way scorer derives
+    per-host presence directly from the gathered replica matrices
+    (``scoring.host_any``), so no extra state is carried.
     """
     C = edges.shape[0]
     assert C % sub == 0
+    hosted = bool(dcn_penalty) and num_hosts > 1
     edges_s = edges.reshape(C // sub, sub, 2)
     valid_s = valid.reshape(C // sub, sub)
     parts = jnp.arange(k, dtype=jnp.int32)
@@ -248,12 +309,18 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
         du, dv = dpart[u], dpart[v]
         rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
         rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
+        host_kw = {}
+        if hosted:
+            host_kw = dict(hrep_u=host_any(rep_u, num_hosts),
+                           hrep_v=host_any(rep_v, num_hosts),
+                           dcn_penalty=dcn_penalty)
         if use_pallas:
             from repro.kernels.hdrf_score import hdrf_choose
-            chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam)
+            chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam,
+                                    **host_kw)
         else:
             scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam,
-                                degree_weighted=degree_weighted)
+                                degree_weighted=degree_weighted, **host_kw)
             chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
         if use_cap:
             ok, sizes = _ranked_admit(chosen, m, sizes, cap, k)
@@ -272,12 +339,18 @@ def _hdrf_chunk(bits, sizes, dpart, edges, valid, *, k, cap, lam, use_cap,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "lam", "backend"),
+                   static_argnames=("k", "lam", "backend", "num_hosts",
+                                    "dcn_penalty"),
                    donate_argnums=(0, 1))
 def _hdrf_remaining_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap,
-                          lam, backend: str = "jnp"):
+                          lam, backend: str = "jnp", num_hosts: int = 0,
+                          dcn_penalty: float = 0.0):
     """2PS-HDRF step 3: HDRF scoring over ALL k partitions for the edges the
-    pre-partitioning pass left over (true degrees known from Phase 1)."""
+    pre-partitioning pass left over (true degrees known from Phase 1).
+
+    ``dcn_penalty`` != 0 (with ``num_hosts`` >= 2) applies the same
+    host-affinity penalty as ``_hdrf_chunk`` — per-host presence is derived
+    from the gathered replica matrices, so no host bit matrix is carried."""
     u, v = edges[:, 0], edges[:, 1]
     cu, cv = v2c[u], v2c[v]
     skip = (cu == cv) | (c2p[cu] == c2p[cv])
@@ -287,23 +360,21 @@ def _hdrf_remaining_chunk(bits, sizes, d, v2c, c2p, edges, valid, *, k, cap,
     parts = jnp.arange(k, dtype=jnp.int32)
     rep_u = bitops.get_jnp(bits, u[:, None], parts[None, :])
     rep_v = bitops.get_jnp(bits, v[:, None], parts[None, :])
+    host_kw = {}
+    if dcn_penalty and num_hosts > 1:
+        host_kw = dict(hrep_u=host_any(rep_u, num_hosts),
+                       hrep_v=host_any(rep_v, num_hosts),
+                       dcn_penalty=dcn_penalty)
     if backend == "pallas":
         from repro.kernels.hdrf_score import hdrf_choose
-        chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam)
+        chosen, _ = hdrf_choose(du, dv, rep_u, rep_v, sizes, lam=lam,
+                                **host_kw)
     else:
-        scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam)
+        scores = hdrf_score(du, dv, rep_u, rep_v, sizes, lam=lam, **host_kw)
         chosen = jnp.argmax(scores, axis=1).astype(jnp.int32)
 
-    ok, sizes = _ranked_admit(chosen, todo, sizes, cap, k)
-    assignment = jnp.where(ok, chosen, jnp.int32(-1))
-    over = todo & ~ok
-    hi = jnp.where(du >= dv, u, v)
-    t2 = hash_mod_jnp(hi.astype(jnp.uint32), k)
-    ok2, sizes = _ranked_admit(t2, over, sizes, cap, k)
-    assignment = jnp.where(ok2, t2, assignment)
-    assignment, sizes = _least_loaded_rounds(
-        assignment, over & ~ok2, sizes, cap, k)
-
+    assignment, sizes = _admit_with_fallback(sizes, chosen, todo,
+                                             du, dv, u, v, k, cap)
     bits = _apply_bits(bits, edges, assignment)
     return bits, sizes, assignment
 

@@ -34,13 +34,52 @@ def resolve_scoring_backend(requested: str = "jnp") -> str:
     return "jnp"
 
 
-def twopsl_score(du, dv, vol_cu, vol_cv, rep_u, rep_v, cu_on_p, cv_on_p):
+def host_affinity_penalty(hrep_u, hrep_v, dcn_penalty: float):
+    """Hierarchy-aware locality term (in the spirit of Hybrid Edge
+    Partitioning, arXiv:2103.12594): a candidate partition pays
+    ``dcn_penalty`` for every endpoint with NO replica on the candidate's
+    host group — placing the edge there would open a new DCN lane for that
+    vertex.
+
+    hrep_u, hrep_v : bool/0-1, endpoint already has a replica somewhere on
+                     the candidate partition's host group
+    returns        : the (non-negative) amount to SUBTRACT from the flat
+                     score
+    """
+    miss_u = 1.0 - hrep_u.astype(jnp.float32)
+    miss_v = 1.0 - hrep_v.astype(jnp.float32)
+    return jnp.float32(dcn_penalty) * (miss_u + miss_v)
+
+
+def host_any(rep, num_hosts: int):
+    """Collapse an ``(..., k)`` per-partition replica matrix to per-host
+    presence, broadcast back to ``(..., k)``: entry ``p`` is True iff ANY
+    partition on ``p``'s host group holds the vertex.  Assumes the
+    contiguous equal-block layout (partition ``p`` on host ``p // (k/H)``,
+    as in ``repro.dist.multihost.normalize_host_groups``); ``k`` must be a
+    multiple of ``num_hosts``.
+    """
+    k = rep.shape[-1]
+    d = k // num_hosts
+    grouped = rep.reshape(*rep.shape[:-1], num_hosts, d).any(axis=-1)
+    return jnp.repeat(grouped, d, axis=-1)
+
+
+def twopsl_score(du, dv, vol_cu, vol_cv, rep_u, rep_v, cu_on_p, cv_on_p,
+                 hrep_u=None, hrep_v=None, dcn_penalty: float = 0.0):
     """s(u,v,p) = g_u + g_v + sc_u + sc_v  for ONE candidate partition p.
 
     du, dv          : degrees of the edge's endpoints
     vol_cu, vol_cv  : volumes of the endpoints' clusters
     rep_u, rep_v    : bool, endpoint already replicated on p
     cu_on_p, cv_on_p: bool, endpoint's cluster is mapped to p
+    hrep_u, hrep_v  : bool, endpoint already replicated anywhere on p's
+                      host group (only read when ``dcn_penalty`` != 0)
+
+    With ``dcn_penalty`` nonzero the flat score is reduced by
+    ``host_affinity_penalty`` — candidates on hosts already holding the
+    endpoints win ties against candidates that would open new DCN lanes.
+    ``dcn_penalty=0`` evaluates the exact flat expression (bit-identical).
     """
     dsum = (du + dv).astype(jnp.float32)
     dsum = jnp.maximum(dsum, 1.0)
@@ -50,11 +89,15 @@ def twopsl_score(du, dv, vol_cu, vol_cv, rep_u, rep_v, cu_on_p, cv_on_p):
     vsum = jnp.maximum(vsum, 1.0)
     sc_u = jnp.where(cu_on_p, vol_cu / vsum, 0.0)
     sc_v = jnp.where(cv_on_p, vol_cv / vsum, 0.0)
-    return g_u + g_v + sc_u + sc_v
+    s = g_u + g_v + sc_u + sc_v
+    if dcn_penalty:
+        s = s - host_affinity_penalty(hrep_u, hrep_v, dcn_penalty)
+    return s
 
 
 def hdrf_score(du, dv, rep_u, rep_v, part_sizes, lam: float = 1.1,
-               eps: float = 1.0, degree_weighted: bool = True):
+               eps: float = 1.0, degree_weighted: bool = True,
+               hrep_u=None, hrep_v=None, dcn_penalty: float = 0.0):
     """HDRF score for an edge against ALL k partitions (the O(k) per-edge
     baseline cost 2PS-L eliminates).  ``degree_weighted=False`` gives the
     PowerGraph Greedy heuristic (replication counts without the
@@ -63,6 +106,10 @@ def hdrf_score(du, dv, rep_u, rep_v, part_sizes, lam: float = 1.1,
     du, dv     : (E,) degrees
     rep_u/v    : (E, k) bool replication state
     part_sizes : (k,) current partition sizes
+    hrep_u/v   : (E, k) bool per-host replica presence broadcast to
+                 partitions (``host_any(rep, H)``); only read when
+                 ``dcn_penalty`` != 0, which subtracts
+                 ``host_affinity_penalty`` from every candidate
     returns    : (E, k) scores
     """
     if degree_weighted:
@@ -78,4 +125,7 @@ def hdrf_score(du, dv, rep_u, rep_v, part_sizes, lam: float = 1.1,
     minsize = part_sizes.min().astype(jnp.float32)
     c_bal = lam * (maxsize - part_sizes.astype(jnp.float32)) / (
         eps + maxsize - minsize)
-    return g_u + g_v + c_bal[None, :]
+    s = g_u + g_v + c_bal[None, :]
+    if dcn_penalty:
+        s = s - host_affinity_penalty(hrep_u, hrep_v, dcn_penalty)
+    return s

@@ -47,12 +47,34 @@ class PartitionerSpec:
     VMEM-resident kernels in ``repro.kernels.edge_score`` /
     ``repro.kernels.hdrf_score``; falls back to jnp automatically where
     Pallas cannot run).
+
+    ``host_groups`` / ``dcn_penalty`` make the scoring pass hierarchy-aware
+    (arXiv:2103.12594-style locality scoring on top of 2PS-L's two-phase
+    restreaming): with ``host_groups=H`` the k partitions are laid out on H
+    host groups of k/H partitions each (partition ``p`` lives on host
+    ``p // (k/H)`` — the same contiguous layout as
+    ``repro.dist.multihost.normalize_host_groups``), and during scoring a
+    candidate partition pays ``dcn_penalty`` per endpoint that has no
+    replica anywhere on the candidate's host group.  ``dcn_penalty=0`` (the
+    default) is bit-identical to flat scoring; ``host_groups`` alone still
+    reports the cross-host replication factor without changing any
+    assignment.  Only the stateful scorers (2PS-L family, HDRF family)
+    honor the penalty — the hash partitioners reject a nonzero one.
+
+    Example (round-trips through JSON, as every spec does; see
+    docs/multihost.md for the full hierarchy story)::
+
+        spec = TwoPSLSpec(host_groups=2, dcn_penalty=1.0)
+        assert spec.algorithm == "2psl"
+        assert spec_from_dict(spec.to_dict()) == spec
     """
 
     alpha: float = 1.05
     chunk_size: int = 1 << 16
     pipeline_depth: int = 2
     scoring_backend: str = "jnp"   # 'jnp' | 'pallas'
+    host_groups: int | None = None  # H host groups of k/H partitions each
+    dcn_penalty: float = 0.0       # score penalty per off-host endpoint
 
     def __post_init__(self):
         self.validate()
@@ -69,6 +91,16 @@ class PartitionerSpec:
         _check(self.scoring_backend in ("jnp", "pallas"),
                f"scoring_backend must be 'jnp' or 'pallas' "
                f"(got {self.scoring_backend!r})")
+        _check(self.host_groups is None
+               or (isinstance(self.host_groups, int) and self.host_groups >= 1),
+               f"host_groups must be None or an int >= 1 "
+               f"(got {self.host_groups!r})")
+        _check(isinstance(self.dcn_penalty, (int, float))
+               and self.dcn_penalty >= 0.0,
+               f"dcn_penalty must be >= 0 (got {self.dcn_penalty!r})")
+        _check(self.dcn_penalty == 0.0 or self.host_groups is not None,
+               "dcn_penalty > 0 needs host_groups set (the penalty is "
+               "defined per host group)")
 
     # -- identity --------------------------------------------------------
     @property
@@ -161,6 +193,13 @@ class DBHSpec(PartitionerSpec):
 
     chunk_size: int = 1 << 18
 
+    def validate(self):
+        super().validate()
+        _check(self.dcn_penalty == 0.0,
+               "DBH hashes instead of scoring — it cannot honor a "
+               "dcn_penalty (host_groups alone is fine: it only adds the "
+               "cross-host replication metric)")
+
     @property
     def algorithm(self) -> str:
         return "dbh"
@@ -181,6 +220,10 @@ class StatelessSpec(PartitionerSpec):
         super().validate()
         _check(self.variant in ("random", "grid"),
                f"variant must be 'random' or 'grid' (got {self.variant!r})")
+        _check(self.dcn_penalty == 0.0,
+               "stateless partitioners hash instead of scoring — they "
+               "cannot honor a dcn_penalty (host_groups alone is fine: it "
+               "only adds the cross-host replication metric)")
 
     @property
     def algorithm(self) -> str:
@@ -208,7 +251,14 @@ SPEC_REGISTRY: dict[str, tuple[type, dict]] = {
 
 def spec_for(name: str, **overrides) -> PartitionerSpec:
     """Build the canonical spec for a registered algorithm name, applying
-    keyword overrides on top of the name's presets."""
+    keyword overrides on top of the name's presets.
+
+    Example::
+
+        spec_for("2ps-hdrf")                      # TwoPSLSpec(scoring='hdrf')
+        spec_for("2psl", alpha=1.1, host_groups=2, dcn_penalty=1.0)
+        spec_for("nope")                          # raises SpecError
+    """
     try:
         cls, presets = SPEC_REGISTRY[name]
     except KeyError:

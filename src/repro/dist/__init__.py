@@ -7,7 +7,10 @@ partition id stream from 2PS-L) to SPMD execution, in three stages:
 1. **partition** (repro.core): a streaming partitioner assigns every edge
    to one of k partitions while minimizing the vertex replication factor
    (RF) — the paper's quality metric, because RF IS the per-layer
-   synchronization volume of the downstream graph computation.
+   synchronization volume of the downstream graph computation.  On a
+   multi-host mesh the spec-level ``host_groups``/``dcn_penalty`` knobs
+   make the scoring itself hierarchy-aware, minimizing the CROSS-HOST
+   replication factor (the DCN share of that volume) at the source.
 
 2. **plan** (dist.partitioned_gnn): ``plan_halo_exchange`` converts the
    assignment into a static, padded ``HaloPlan`` — per-partition local edge
@@ -26,6 +29,11 @@ partition id stream from 2PS-L) to SPMD execution, in three stages:
    ``lm_param_specs``, ...) used by every jit-lowered cell in the repo, so
    partitioned GNN training composes with the LM/recsys sharding layouts
    on the same meshes.
+
+Multi-host meshes insert stage 2.5 (dist.multihost): ``HostHaloPlan``
+re-slices the flat exchange into intra-host (ICI) pair tables plus ONE
+aggregated DCN lane per ordered host pair, and the partitioned steps'
+``_halo_combine`` routes on it automatically — see docs/multihost.md.
 """
 from .sharding import (best_spec, constrain, fsdp_axes, gnn_batch_specs,
                        lm_batch_specs, lm_cache_specs, lm_param_specs,

@@ -25,6 +25,15 @@ is already a full-mesh reduction).  With a single host group the plan
 collapses exactly to the base ``HaloPlan``: the intra tables ARE the full
 pair tables and the host lanes are empty — bit-identical execution.
 
+Aggregation bounds each (host pair, vertex) to ONE crossing, but the
+number of crossings is fixed by the partitioning itself.  The partitioner
+can shrink it at the source: ``PartitionerSpec(host_groups=H,
+dcn_penalty=P)`` penalizes candidates whose host group holds no replica
+of an endpoint during the scoring pass (``repro.core.scoring``), lowering
+``dcn_summary()['cross_host_rf']`` — and with it every lane below —
+before this module ever slices tables.  See docs/multihost.md for the
+three levels together.
+
 Layout constraint: host ``A`` must own partitions ``[A*D, (A+1)*D)`` (the
 mesh places partition ``p`` on flat device ``p``), so ``host_groups`` is
 either a host count ``H`` dividing ``k`` or that exact contiguous
@@ -119,11 +128,29 @@ class HostHaloPlan:
                 "ov_idx": self.base.ov_idx,
                 "hsend_idx": self.hsend_idx, "hrecv_idx": self.hrecv_idx}
 
+    def cross_host_replication_factor(self) -> float:
+        """Mean number of host groups holding each covered vertex — the
+        hierarchy-aware analogue of the flat RF (and the quantity the
+        spec-level ``dcn_penalty`` shrinks at partition time).  Computed
+        from the base plan's vertex maps, so it agrees with
+        ``repro.core.metrics.cross_host_replication_factor`` on the
+        bit matrix of the same assignment."""
+        d = self.parts_per_host
+        per_host = []
+        for h in range(self.num_hosts):
+            vs = self.vmap_global[h * d:(h + 1) * d]
+            per_host.append(np.unique(vs[vs >= 0]))
+        pairs = sum(len(held) for held in per_host)
+        covered = len(np.unique(np.concatenate(per_host)))
+        return pairs / max(covered, 1)
+
     def dcn_summary(self) -> dict:
-        """How much the host-level aggregation saves on the DCN: rows any
-        naive per-partition-pair exchange would ship across hosts versus
-        the aggregated lanes (each shared vertex crosses once per ordered
-        host pair)."""
+        """How much the host layout saves on the DCN: rows any naive
+        per-partition-pair exchange would ship across hosts versus the
+        aggregated lanes (each shared vertex crosses once per ordered host
+        pair), plus the cross-host replication factor — the knob a
+        ``dcn_penalty`` partition run shrinks at the source (compare this
+        block across artifacts to see the lane reduction)."""
         k, d = self.k, self.parts_per_host
         cross = self.host_of[:, None] != self.host_of[None, :]
         naive = int(((self.base.send_idx >= 0).sum(axis=-1) * cross).sum())
@@ -135,6 +162,8 @@ class HostHaloPlan:
             "dcn_rows_naive": naive,
             "dcn_rows_aggregated": agg,
             "dcn_aggregation_ratio": (naive / agg) if agg else 1.0,
+            "cross_host_rf": float(self.cross_host_replication_factor()),
+            "flat_rf": float(self.replication_factor),
         }
 
 

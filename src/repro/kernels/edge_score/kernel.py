@@ -10,12 +10,22 @@ it into one VMEM pass instead of letting XLA materialize each intermediate
 Layout: the edge stream chunk is reshaped to (rows, 128) so the lane
 dimension is hardware-native; one grid step processes a (BLOCK_ROWS, 128)
 tile of edges with every operand resident in VMEM.
+
+The host-aware variant (``dcn_penalty`` != 0, arXiv:2103.12594-style
+locality scoring) takes four extra int8 tiles — per-candidate host-group
+replica presence — and subtracts ``dcn_penalty`` per endpoint missing from
+the candidate's host group; the penalty is a compile-time constant baked
+into the kernel, so the flat kernel is untouched when it is 0.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.scoring import host_affinity_penalty
 
 LANES = 128
 BLOCK_ROWS = 8  # 8 * 128 = 1024 edges per grid step
@@ -29,15 +39,13 @@ def _score(d_self, d_other, vol_self, vol_other, rep, on_p):
     return g + sc
 
 
-def _edge_score_kernel(du_ref, dv_ref, vol_u_ref, vol_v_ref,
-                       rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref,
-                       pu_ref, pv_ref, chosen_ref, best_ref):
+def _two_candidate_scores(du_ref, dv_ref, vol_u_ref, vol_v_ref,
+                          rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref,
+                          pu, pv):
     du = du_ref[...].astype(jnp.float32)
     dv = dv_ref[...].astype(jnp.float32)
     vol_u = vol_u_ref[...].astype(jnp.float32)
     vol_v = vol_v_ref[...].astype(jnp.float32)
-    pu = pu_ref[...]
-    pv = pv_ref[...]
 
     # candidate 1 = pu: u's cluster is on pu by construction
     s1 = (_score(du, dv, vol_u, vol_v, rep_u1_ref[...] != 0, True)
@@ -45,14 +53,48 @@ def _edge_score_kernel(du_ref, dv_ref, vol_u_ref, vol_v_ref,
     # candidate 2 = pv: v's cluster is on pv by construction
     s2 = (_score(du, dv, vol_u, vol_v, rep_u2_ref[...] != 0, pu == pv)
           + _score(dv, du, vol_v, vol_u, rep_v2_ref[...] != 0, True))
+    return s1, s2
 
+
+def _edge_score_kernel(du_ref, dv_ref, vol_u_ref, vol_v_ref,
+                       rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref,
+                       pu_ref, pv_ref, chosen_ref, best_ref):
+    pu = pu_ref[...]
+    pv = pv_ref[...]
+    s1, s2 = _two_candidate_scores(
+        du_ref, dv_ref, vol_u_ref, vol_v_ref,
+        rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref, pu, pv)
+    chosen_ref[...] = jnp.where(s2 > s1, pv, pu)
+    best_ref[...] = jnp.maximum(s1, s2)
+
+
+def _edge_score_host_kernel(du_ref, dv_ref, vol_u_ref, vol_v_ref,
+                            rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref,
+                            pu_ref, pv_ref,
+                            hrep_u1_ref, hrep_v1_ref, hrep_u2_ref,
+                            hrep_v2_ref, chosen_ref, best_ref, *,
+                            dcn_penalty: float):
+    pu = pu_ref[...]
+    pv = pv_ref[...]
+    s1, s2 = _two_candidate_scores(
+        du_ref, dv_ref, vol_u_ref, vol_v_ref,
+        rep_u1_ref, rep_v1_ref, rep_u2_ref, rep_v2_ref, pu, pv)
+    s1 = s1 - host_affinity_penalty(hrep_u1_ref[...] != 0,
+                                    hrep_v1_ref[...] != 0, dcn_penalty)
+    s2 = s2 - host_affinity_penalty(hrep_u2_ref[...] != 0,
+                                    hrep_v2_ref[...] != 0, dcn_penalty)
     chosen_ref[...] = jnp.where(s2 > s1, pv, pu)
     best_ref[...] = jnp.maximum(s1, s2)
 
 
 def edge_score_pallas(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
-                      pu, pv, *, interpret: bool = False):
+                      pu, pv, host_flags=None, *,
+                      dcn_penalty: float = 0.0, interpret: bool = False):
     """All inputs (rows, 128); rep_* are int8/bool 0/1 flags.
+
+    ``host_flags`` (with ``dcn_penalty`` != 0) is the 4-tuple
+    ``(hrep_u1, hrep_v1, hrep_u2, hrep_v2)`` of int8 host-group presence
+    tiles feeding the locality penalty.
 
     Returns (chosen partition (rows,128) int32, best score (rows,128) f32).
     """
@@ -60,14 +102,21 @@ def edge_score_pallas(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
     assert rows % BLOCK_ROWS == 0, (rows, BLOCK_ROWS)
     grid = (rows // BLOCK_ROWS,)
     spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    args = [du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2, pu, pv]
+    if dcn_penalty:
+        kernel = functools.partial(_edge_score_host_kernel,
+                                   dcn_penalty=dcn_penalty)
+        args += list(host_flags)
+    else:
+        kernel = _edge_score_kernel
     return pl.pallas_call(
-        _edge_score_kernel,
+        kernel,
         grid=grid,
-        in_specs=[spec] * 10,
+        in_specs=[spec] * len(args),
         out_specs=[spec, spec],
         out_shape=[
             jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
             jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
         ],
         interpret=interpret,
-    )(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2, pu, pv)
+    )(*args)

@@ -30,10 +30,17 @@ def pallas_ready() -> bool:
         return False
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "dcn_penalty"))
 def edge_score_choose(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
-                      pu, pv, *, interpret: bool | None = None):
-    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32)."""
+                      pu, pv, hrep_u1=None, hrep_v1=None, hrep_u2=None,
+                      hrep_v2=None, *, dcn_penalty: float = 0.0,
+                      interpret: bool | None = None):
+    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32).
+
+    ``hrep_*`` (0/1 host-group replica presence for each endpoint on each
+    candidate's host) are only read when ``dcn_penalty`` != 0, which routes
+    the call through the host-aware kernel variant; with the default 0 the
+    flat kernel runs and the extra args are ignored entirely."""
     if interpret is None:
         interpret = not _on_tpu()
     E = du.shape[0]
@@ -49,5 +56,11 @@ def edge_score_choose(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2, rep_v2,
             prep(rep_u1, jnp.int8), prep(rep_v1, jnp.int8),
             prep(rep_u2, jnp.int8), prep(rep_v2, jnp.int8),
             prep(pu, jnp.int32), prep(pv, jnp.int32)]
-    chosen, best = edge_score_pallas(*args, interpret=interpret)
+    host_flags = None
+    if dcn_penalty:
+        host_flags = tuple(prep(h, jnp.int8)
+                           for h in (hrep_u1, hrep_v1, hrep_u2, hrep_v2))
+    chosen, best = edge_score_pallas(*args, host_flags,
+                                     dcn_penalty=dcn_penalty,
+                                     interpret=interpret)
     return chosen.reshape(Ep)[:E], best.reshape(Ep)[:E]

@@ -8,10 +8,21 @@ from repro.core.scoring import twopsl_score
 
 
 def edge_score_choose_ref(du, dv, vol_u, vol_v, rep_u1, rep_v1, rep_u2,
-                          rep_v2, pu, pv):
-    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32)."""
+                          rep_v2, pu, pv, hrep_u1=None, hrep_v1=None,
+                          hrep_u2=None, hrep_v2=None, *,
+                          dcn_penalty: float = 0.0):
+    """Flat (E,) inputs -> (chosen (E,) int32, best (E,) f32).
+
+    ``hrep_*`` + ``dcn_penalty`` mirror the kernel's host-aware variant
+    (see ``repro.core.scoring.host_affinity_penalty``)."""
+    def hosted(h):
+        return (h != 0) if dcn_penalty else None
     s1 = twopsl_score(du, dv, vol_u, vol_v, rep_u1 != 0, rep_v1 != 0,
-                      jnp.ones_like(pu, bool), pv == pu)
+                      jnp.ones_like(pu, bool), pv == pu,
+                      hrep_u=hosted(hrep_u1), hrep_v=hosted(hrep_v1),
+                      dcn_penalty=dcn_penalty)
     s2 = twopsl_score(du, dv, vol_u, vol_v, rep_u2 != 0, rep_v2 != 0,
-                      pu == pv, jnp.ones_like(pv, bool))
+                      pu == pv, jnp.ones_like(pv, bool),
+                      hrep_u=hosted(hrep_u2), hrep_v=hosted(hrep_v2),
+                      dcn_penalty=dcn_penalty)
     return jnp.where(s2 > s1, pv, pu).astype(jnp.int32), jnp.maximum(s1, s2)

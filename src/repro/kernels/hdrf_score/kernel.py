@@ -15,11 +15,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.scoring import host_affinity_penalty
+
 BLOCK_E = 8
 
 
-def _hdrf_kernel(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
-                 chosen_ref, best_ref, *, lam: float, k: int):
+def _hdrf_scores(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref, *,
+                 lam: float, k: int):
     du = du_ref[...].astype(jnp.float32)        # (BLOCK_E, 1)
     dv = dv_ref[...].astype(jnp.float32)
     dsum = jnp.maximum(du + dv, 1.0)
@@ -32,21 +34,50 @@ def _hdrf_kernel(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
     maxs = jnp.max(jnp.where(_lane_mask(sizes, k), sizes, -jnp.inf))
     mins = jnp.min(jnp.where(_lane_mask(sizes, k), sizes, jnp.inf))
     c_bal = lam * (maxs - sizes) / (1.0 + maxs - mins)
+    return g_u + g_v + c_bal
 
-    score = g_u + g_v + c_bal
+
+def _choose(score, k, chosen_ref, best_ref):
     score = jnp.where(_lane_mask(score, k), score, -jnp.inf)
     chosen_ref[...] = jnp.argmax(score, axis=1, keepdims=True).astype(
         jnp.int32)
     best_ref[...] = jnp.max(score, axis=1, keepdims=True)
 
 
+def _hdrf_kernel(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
+                 chosen_ref, best_ref, *, lam: float, k: int):
+    score = _hdrf_scores(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
+                         lam=lam, k=k)
+    _choose(score, k, chosen_ref, best_ref)
+
+
+def _hdrf_host_kernel(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
+                      hrep_u_ref, hrep_v_ref, chosen_ref, best_ref, *,
+                      lam: float, k: int, dcn_penalty: float):
+    """Host-aware HDRF: the flat score minus ``dcn_penalty`` per endpoint
+    with no replica on the candidate lane's host group (``hrep_*`` are the
+    per-host presence matrices broadcast to partition lanes)."""
+    score = _hdrf_scores(du_ref, dv_ref, rep_u_ref, rep_v_ref, sizes_ref,
+                         lam=lam, k=k)
+    score = score - host_affinity_penalty(hrep_u_ref[...] != 0,
+                                          hrep_v_ref[...] != 0,
+                                          dcn_penalty)
+    _choose(score, k, chosen_ref, best_ref)
+
+
 def _lane_mask(x, k):
     return jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1) < k
 
 
-def hdrf_pallas(du, dv, rep_u, rep_v, sizes, *, lam: float, k: int,
+def hdrf_pallas(du, dv, rep_u, rep_v, sizes, hrep_u=None, hrep_v=None, *,
+                lam: float, k: int, dcn_penalty: float = 0.0,
                 interpret: bool = False):
     """du, dv: (E, 1); rep_u/v: (E, k_pad) int8; sizes: (1, k_pad).
+
+    ``hrep_u``/``hrep_v`` ((E, k_pad) int8 host presence, with
+    ``dcn_penalty`` != 0) select the host-aware kernel variant; the flat
+    kernel is unchanged when the penalty is 0.
+
     Returns (chosen (E, 1) int32, best (E, 1) f32)."""
     E, k_pad = rep_u.shape
     assert E % BLOCK_E == 0
@@ -54,14 +85,23 @@ def hdrf_pallas(du, dv, rep_u, rep_v, sizes, *, lam: float, k: int,
     col = pl.BlockSpec((BLOCK_E, 1), lambda i: (i, 0))
     mat = pl.BlockSpec((BLOCK_E, k_pad), lambda i: (i, 0))
     row = pl.BlockSpec((1, k_pad), lambda i: (0, 0))
+    args = [du, dv, rep_u, rep_v, sizes]
+    in_specs = [col, col, mat, mat, row]
+    if dcn_penalty:
+        kernel = functools.partial(_hdrf_host_kernel, lam=lam, k=k,
+                                   dcn_penalty=dcn_penalty)
+        args += [hrep_u, hrep_v]
+        in_specs += [mat, mat]
+    else:
+        kernel = functools.partial(_hdrf_kernel, lam=lam, k=k)
     return pl.pallas_call(
-        functools.partial(_hdrf_kernel, lam=lam, k=k),
+        kernel,
         grid=grid,
-        in_specs=[col, col, mat, mat, row],
+        in_specs=in_specs,
         out_specs=[col, col],
         out_shape=[
             jax.ShapeDtypeStruct((E, 1), jnp.int32),
             jax.ShapeDtypeStruct((E, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(du, dv, rep_u, rep_v, sizes)
+    )(*args)

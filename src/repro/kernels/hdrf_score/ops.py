@@ -27,10 +27,17 @@ def pallas_ready() -> bool:
         return False
 
 
-@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
-def hdrf_choose(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1,
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "dcn_penalty", "interpret"))
+def hdrf_choose(du, dv, rep_u, rep_v, sizes, hrep_u=None, hrep_v=None, *,
+                lam: float = 1.1, dcn_penalty: float = 0.0,
                 interpret: bool | None = None):
     """du, dv: (E,); rep_u/v: (E, k) bool/int8; sizes: (k,).
+
+    ``hrep_u``/``hrep_v`` ((E, k) host-group presence broadcast to
+    partitions, see ``repro.core.scoring.host_any``) are only read when
+    ``dcn_penalty`` != 0, which routes through the host-aware kernel.
+
     Returns (chosen (E,) int32, best (E,) f32)."""
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
@@ -39,12 +46,17 @@ def hdrf_choose(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1,
     pad_k = (-k) % LANES
     Ep = E + pad_e
 
+    def mat(x):
+        return jnp.pad(x.astype(jnp.int8), ((0, pad_e), (0, pad_k)))
+
     du_p = jnp.pad(du.astype(jnp.float32), (0, pad_e)).reshape(Ep, 1)
     dv_p = jnp.pad(dv.astype(jnp.float32), (0, pad_e)).reshape(Ep, 1)
-    ru = jnp.pad(rep_u.astype(jnp.int8), ((0, pad_e), (0, pad_k)))
-    rv = jnp.pad(rep_v.astype(jnp.int8), ((0, pad_e), (0, pad_k)))
+    ru, rv = mat(rep_u), mat(rep_v)
     sz = jnp.pad(sizes.astype(jnp.float32), (0, pad_k)).reshape(1, -1)
+    hu = mat(hrep_u) if dcn_penalty else None
+    hv = mat(hrep_v) if dcn_penalty else None
 
-    chosen, best = hdrf_pallas(du_p, dv_p, ru, rv, sz, lam=lam, k=k,
+    chosen, best = hdrf_pallas(du_p, dv_p, ru, rv, sz, hu, hv, lam=lam,
+                               k=k, dcn_penalty=dcn_penalty,
                                interpret=interpret)
     return chosen.reshape(Ep)[:E], best.reshape(Ep)[:E]

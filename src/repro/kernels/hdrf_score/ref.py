@@ -6,10 +6,19 @@ import jax.numpy as jnp
 from repro.core.scoring import hdrf_score
 
 
-def hdrf_choose_ref(du, dv, rep_u, rep_v, sizes, *, lam: float = 1.1):
+def hdrf_choose_ref(du, dv, rep_u, rep_v, sizes, hrep_u=None, hrep_v=None,
+                    *, lam: float = 1.1, dcn_penalty: float = 0.0):
     """du, dv: (E,); rep_u/v: (E, k) bool; sizes: (k,).
+
+    ``hrep_u``/``hrep_v`` + ``dcn_penalty`` mirror the kernel's host-aware
+    variant (see ``repro.core.scoring.host_affinity_penalty``).
+
     Returns (chosen (E,) int32, best (E,) f32)."""
+    host_kw = {}
+    if dcn_penalty:
+        host_kw = dict(hrep_u=hrep_u != 0, hrep_v=hrep_v != 0,
+                       dcn_penalty=dcn_penalty)
     scores = hdrf_score(du.astype(jnp.float32), dv.astype(jnp.float32),
-                        rep_u != 0, rep_v != 0, sizes, lam=lam)
+                        rep_u != 0, rep_v != 0, sizes, lam=lam, **host_kw)
     return (jnp.argmax(scores, axis=1).astype(jnp.int32),
             jnp.max(scores, axis=1))

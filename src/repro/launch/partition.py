@@ -20,13 +20,22 @@ Outputs, from lightest to heaviest:
                           ``PartitionArtifact.load(DIR)`` then hands
                           downstream SPMD training its cached ``HaloPlan``
                           without re-streaming the graph.
-* ``--hosts H``           (with ``--artifact-dir``) additionally persists
-                          the host-grouped DCN-aware exchange layout
-                          (``host_plan.npz``, manifest format v2): intra-
-                          host pair tables + per-host-pair aggregated
-                          lanes, so SPMD steps on an H-host mesh exchange
-                          each boundary vertex once per host pair instead
-                          of once per partition pair.
+* ``--hosts H``           lays the k partitions out on H host groups:
+                          the run reports the cross-host replication
+                          factor, and with ``--artifact-dir`` additionally
+                          persists the host-grouped DCN-aware exchange
+                          layout (``host_plan.npz``, manifest format v2):
+                          intra-host pair tables + per-host-pair
+                          aggregated lanes, so SPMD steps on an H-host
+                          mesh exchange each boundary vertex once per host
+                          pair instead of once per partition pair.
+* ``--dcn-penalty P``     (with ``--hosts``) makes the scoring pass itself
+                          hierarchy-aware: candidates on host groups with
+                          no replica of an endpoint pay P per missing
+                          endpoint, shrinking the DCN lanes at partition
+                          time instead of only aggregating them afterward
+                          (stateful algorithms only; 0 = flat scoring,
+                          bit-identical to omitting the flag).
 """
 from __future__ import annotations
 
@@ -62,13 +71,20 @@ def main(argv=None):
                     help="with --artifact-dir: skip the halo-plan arrays "
                          "(assignment + manifest only, no planning sweep)")
     ap.add_argument("--hosts", type=int, default=None,
-                    help="with --artifact-dir: also persist the "
-                         "host-grouped (DCN-aware) exchange layout for "
-                         "this many hosts (must divide --k; partitions "
-                         "p*k/hosts..(p+1)*k/hosts-1 share a host). "
-                         "Downstream SPMD steps loading the artifact run "
+                    help="lay the k partitions out on this many host "
+                         "groups (must divide --k; partitions "
+                         "p*k/hosts..(p+1)*k/hosts-1 share a host): "
+                         "reports the cross-host replication factor, "
+                         "enables --dcn-penalty, and with --artifact-dir "
+                         "also persists the host-grouped (DCN-aware) "
+                         "exchange layout downstream SPMD steps run as "
                          "the two-level intra-host all_to_all + "
                          "aggregated inter-host lane exchange")
+    ap.add_argument("--dcn-penalty", type=float, default=0.0,
+                    help="with --hosts: hierarchy-aware scoring penalty "
+                         "per endpoint missing from a candidate's host "
+                         "group (stateful algorithms only; 0 = flat "
+                         "scoring, bit-identical to the default)")
     ap.add_argument("--plan-json", default=None,
                     help="write a DGL-style partition manifest (halo-plan "
                          "capacities + replication factor) to this path; "
@@ -88,9 +104,15 @@ def main(argv=None):
                     help="simulate a storage device with this read rate")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
-    if args.hosts is not None and (not args.artifact_dir or args.no_plan):
-        ap.error("--hosts needs --artifact-dir (and a halo plan, so it is "
-                 "incompatible with --no-plan)")
+    if args.hosts is not None and args.artifact_dir and args.no_plan:
+        ap.error("--hosts with --artifact-dir persists the host plan, "
+                 "which needs the halo plan --no-plan skips")
+    if args.dcn_penalty and args.hosts is None:
+        ap.error("--dcn-penalty needs --hosts (the penalty is defined per "
+                 "host group)")
+    if args.dcn_penalty and args.algorithm in ("dbh", "grid", "random"):
+        ap.error(f"--dcn-penalty only applies to scoring algorithms; "
+                 f"{args.algorithm!r} hashes")
 
     stream = MemmapEdgeStream(args.input)
     if args.throttle_mbps:
@@ -99,6 +121,9 @@ def main(argv=None):
     overrides = {"alpha": args.alpha, "chunk_size": args.chunk_size}
     if args.algorithm in ("2psl", "2ps-hdrf"):
         overrides["cluster_passes"] = args.cluster_passes
+    if args.hosts is not None:
+        overrides["host_groups"] = args.hosts
+        overrides["dcn_penalty"] = args.dcn_penalty
     if args.pipeline_depth is not None:
         overrides["pipeline_depth"] = args.pipeline_depth
     if args.scoring_backend is not None:

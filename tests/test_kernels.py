@@ -60,6 +60,39 @@ def test_edge_score_padded_streaming_chunk(n_valid):
     np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-6)
 
 
+@pytest.mark.parametrize("E,pen", [(5, 0.5), (128, 1.0), (1024, 2.5)])
+def test_edge_score_host_variant_matches_ref(E, pen):
+    """The host-aware kernel (dcn_penalty != 0 + 4 host-presence tiles)
+    must match the jnp oracle; penalty 0 must reproduce the flat kernel
+    exactly (same inputs, host flags ignored)."""
+    from repro.kernels.edge_score import (edge_score_choose,
+                                          edge_score_choose_ref)
+    du = jnp.asarray(rng.integers(1, 100, E), jnp.int32)
+    dv = jnp.asarray(rng.integers(1, 100, E), jnp.int32)
+    vu = jnp.asarray(rng.integers(1, 1000, E), jnp.int32)
+    vv = jnp.asarray(rng.integers(1, 1000, E), jnp.int32)
+    reps = [jnp.asarray(rng.integers(0, 2, E), jnp.int8) for _ in range(4)]
+    hreps = [jnp.asarray(rng.integers(0, 2, E), jnp.int8) for _ in range(4)]
+    pu = jnp.asarray(rng.integers(0, 16, E), jnp.int32)
+    pv = jnp.asarray(rng.integers(0, 16, E), jnp.int32)
+    c_k, b_k = edge_score_choose(du, dv, vu, vv, *reps, pu, pv, *hreps,
+                                 dcn_penalty=pen, interpret=True)
+    c_r, b_r = edge_score_choose_ref(du, dv, vu, vv, *reps, pu, pv, *hreps,
+                                     dcn_penalty=pen)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    # the penalty subtraction can cancel the flat score towards 0, where
+    # the kernel's different summation grouping shows up relatively
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r),
+                               rtol=1e-6, atol=1e-6)
+    # penalty=0: host flags ignored, flat kernel bit-exact
+    c0, b0 = edge_score_choose(du, dv, vu, vv, *reps, pu, pv, *hreps,
+                               dcn_penalty=0.0, interpret=True)
+    cf, bf = edge_score_choose(du, dv, vu, vv, *reps, pu, pv,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(cf))
+    np.testing.assert_array_equal(np.asarray(b0), np.asarray(bf))
+
+
 # ---------------------------------------------------------------------------
 # hdrf_score (k-way scoring baseline)
 # ---------------------------------------------------------------------------
@@ -102,6 +135,34 @@ def test_hdrf_score_padded_streaming_chunk(n_valid):
     assert np.all(np.isfinite(np.asarray(b_k)))
     np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
     np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-5)
+
+
+@pytest.mark.parametrize("E,k,hosts,pen", [(16, 4, 2, 1.0), (64, 32, 4, 0.7),
+                                           (100, 256, 2, 2.0)])
+def test_hdrf_score_host_variant_matches_ref(E, k, hosts, pen):
+    """Host-aware HDRF kernel vs oracle, with the host presence matrices
+    derived the same way the chunk kernel derives them (host_any over the
+    replica matrices)."""
+    from repro.core.scoring import host_any
+    from repro.kernels.hdrf_score import hdrf_choose, hdrf_choose_ref
+    du = jnp.asarray(rng.integers(1, 100, E), jnp.float32)
+    dv = jnp.asarray(rng.integers(1, 100, E), jnp.float32)
+    ru = jnp.asarray(rng.integers(0, 2, (E, k)), jnp.int8)
+    rv = jnp.asarray(rng.integers(0, 2, (E, k)), jnp.int8)
+    sz = jnp.asarray(rng.integers(0, 500, k), jnp.int32)
+    hu = host_any(ru != 0, hosts)
+    hv = host_any(rv != 0, hosts)
+    c_k, b_k = hdrf_choose(du, dv, ru, rv, sz, hu, hv, dcn_penalty=pen,
+                           interpret=True)
+    c_r, b_r = hdrf_choose_ref(du, dv, ru, rv, sz, hu, hv, dcn_penalty=pen)
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_r), rtol=1e-5)
+    # penalty=0 reproduces the flat kernel on the same inputs
+    c0, b0 = hdrf_choose(du, dv, ru, rv, sz, hu, hv, dcn_penalty=0.0,
+                         interpret=True)
+    cf, bf = hdrf_choose(du, dv, ru, rv, sz, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(cf))
+    np.testing.assert_array_equal(np.asarray(b0), np.asarray(bf))
 
 
 # ---------------------------------------------------------------------------
