@@ -20,6 +20,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
+import socket
 import time
 
 import numpy as np
@@ -40,7 +42,10 @@ ALGOS = ("2psl", "hdrf", "dbh")
 HOSTED_ALGOS = ("2psl", "hdrf")
 HOSTED_KW = {"host_groups": 2, "dcn_penalty": 1.0}
 TARGET_SPEEDUP = 1.3
-SCHEMA_VERSION = 1
+#: v1: timing rows only.  v2: env block gains hostname / cpu_model /
+#: cpu_count / process_count, pipelined rows gain critical_stage +
+#: stage_busy_frac (repro.obs stall attribution).
+SCHEMA_VERSION = 2
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_engine.json")
@@ -170,6 +175,34 @@ def _timeit(fn, repeats):
     return float(np.mean(times))
 
 
+def _stall_columns(spec, stream, k):
+    """Per-stage busy fractions + critical stage for a config row, from
+    one extra traced (untimed) run — tracing is purely observational, so
+    it matches the timed runs bit for bit, but it is kept out of the
+    timed loop so the row's seconds stay overhead-free."""
+    from repro import obs
+    tracer = obs.Tracer()
+    with obs.use_tracer(tracer), obs.use_registry(obs.MetricsRegistry()):
+        res = run_spec(spec, stream, k)
+    stall = res.extras["stall_report"]
+    return {
+        "critical_stage": stall["critical_stage"],
+        "stage_busy_frac": {s: round(v["busy_frac"], 4)
+                            for s, v in stall["stages"].items()},
+    }
+
+
+def _cpu_model() -> str:
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return platform.processor() or platform.machine() or "unknown"
+
+
 def _default_backends():
     if jax.devices()[0].platform == "tpu":
         return ["jnp", "pallas"]
@@ -206,6 +239,7 @@ def run_benchmark(graphs: dict, *, depths, backends, repeats, k,
                         "seconds": round(secs, 4),
                         "edges_per_sec": round(E / secs, 1),
                         "speedup_vs_legacy": round(base_secs / secs, 3),
+                        **_stall_columns(spec, stream, k),
                     })
                     print(f"{gname:8s} {algo:5s} d={depth} {backend:6s}    "
                           f"{E / secs / 1e6:8.3f} Medges/s  "
@@ -309,6 +343,12 @@ def main(argv=None):
             "platform": jax.devices()[0].platform,
             "device_count": jax.device_count(),
             "jax": jax.__version__,
+            # machine identity, so rows from different machines in the
+            # perf trajectory are distinguishable
+            "hostname": socket.gethostname(),
+            "cpu_model": _cpu_model(),
+            "cpu_count": os.cpu_count(),
+            "process_count": jax.process_count(),
         },
         "k": k,
         "chunk_sizes": {a: bench_spec(a).chunk_size for a in ALGOS},

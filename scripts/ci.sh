@@ -41,6 +41,7 @@ PY
 python -m repro.launch.partition \
     --input "$smoke_dir/graph.bin" --k 4 --algorithm 2psl \
     --chunk-size 256 --artifact-dir "$smoke_dir/artifact" --json \
+    --trace "$smoke_dir/trace.json" \
     > "$smoke_dir/report.json"
 python - "$smoke_dir" <<'PY'
 import json, sys
@@ -58,6 +59,27 @@ print(f"CLI smoke OK: rf={report['replication_factor']:.3f} "
       f"b_cap={plan.b_cap}")
 PY
 
+# ---- trace smoke stage: the --trace export from the CLI run above must be
+# a valid Chrome trace_event doc covering every pipeline stage, and the
+# manifest's stall report must name a critical stage with sane fractions --
+python - "$smoke_dir" <<'PY'
+import json, sys
+from repro.obs import STAGES, validate_chrome_trace
+doc = json.load(open(sys.argv[1] + "/trace.json"))
+names = validate_chrome_trace(doc)
+missing = {"read", "dispatch", "writeback"} - names
+assert not missing, f"trace lacks pipeline-stage spans: {missing}"
+assert any(n.startswith("pass:") for n in names), names
+manifest = json.load(open(sys.argv[1] + "/artifact/manifest.json"))
+stall = manifest["stall_report"]
+assert stall["critical_stage"] in STAGES, stall["critical_stage"]
+for stage, st in stall["stages"].items():
+    total = st["busy_frac"] + st["idle_frac"]
+    assert abs(total - 1.0) < 1e-9, (stage, total)
+print(f"trace smoke OK: {len(names)} span names, "
+      f"critical stage {stall['critical_stage']} ({stall['verdict']})")
+PY
+
 # ---- bench smoke stage: engine throughput on a tiny graph, then validate
 # the BENCH_engine.json schema the perf trajectory is built from ----------
 python -m benchmarks.engine_throughput --smoke --depths 1,2 \
@@ -66,7 +88,7 @@ python - "$smoke_dir" <<'PY'
 import json, sys
 doc = json.load(open(sys.argv[1] + "/BENCH_engine.json"))
 assert doc["benchmark"] == "engine_throughput"
-assert doc["schema_version"] == 1
+assert doc["schema_version"] >= 1    # v2 added env details + stall columns
 assert doc["graphs"] and doc["results"]
 assert all(g["edges"] > 0 and g["vertices"] > 0
            for g in doc["graphs"].values())

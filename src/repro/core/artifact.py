@@ -8,7 +8,9 @@ run once.  Directory layout::
     <dir>/
       assignment.bin    (E,) int32 edge -> partition memmap
       manifest.json     spec (to_dict), graph meta, quality, timings,
-                        halo-plan capacity envelope, per-part edge counts
+                        halo-plan capacity envelope, per-part edge counts,
+                        and — when the run was traced (repro.obs) — the
+                        pipeline stall report (stage busy/idle fractions)
       halo_plan.npz     the full padded HaloPlan arrays (optional)
       host_plan.npz     host-grouped exchange tables (optional, format v2):
                         the ``HostHaloPlan`` re-slicing of halo_plan.npz
@@ -207,6 +209,9 @@ class PartitionArtifact:
                           for kk, v in result.timings.items()},
             "simulated_io_s": round(result.simulated_io_seconds, 6),
             "extras": _json_safe(result.extras),
+            # stall attribution from a traced run (repro.obs): per-stage
+            # busy/idle fractions + critical-stage verdict, None untraced
+            "stall_report": result.extras.get("stall_report"),
             "halo_plan": None,
             "host_plan": None,
         }

@@ -71,6 +71,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import (PipelineStallReport, StallClock, get_registry,
+                   get_tracer, use_registry, use_tracer)
 from . import bitops, partitioning as P
 from .clustering import streaming_clustering
 from .mapping import map_clusters_lpt
@@ -80,7 +82,7 @@ from .metrics import (PartitionQuality, capacity,
 from .scoring import resolve_scoring_backend
 from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, SpecError,
                     StatelessSpec, TwoPSLSpec)
-from .stream import EdgeStream
+from .stream import EdgeStream, prefetch
 
 
 @dataclass
@@ -105,18 +107,36 @@ class PartitionRunResult:
 
     @property
     def total_seconds(self) -> float:
+        """Run wall time (excluding any real stream IO the engine did not
+        see).  ``timings`` keys are **disjoint phases** — every second of
+        the run is counted under exactly one key, so their sum never
+        double-counts.  In particular host writeback (assignment
+        materialization + memmap writes + host folds) is its own
+        ``'writeback'`` key rather than being absorbed into whichever
+        scoring/hashing pass it overlapped (at depth 1 nothing overlaps,
+        so scoring used to silently swallow it), and the end-of-run
+        quality computation is ``'finalize'``."""
         return sum(self.timings.values()) + self.simulated_io_seconds
 
 
 class _Timer:
+    """Phase wall-clock accounting.  Every second between construction and
+    the final ``lap`` lands under exactly one key: ``lap`` charges the
+    elapsed time since the previous lap to ``name`` (minus ``exclude``
+    seconds already charged elsewhere via ``add``), so keys stay disjoint
+    and ``sum(t.values())`` never double-counts."""
+
     def __init__(self):
         self.t = {}
         self._last = time.perf_counter()
 
-    def lap(self, name):
+    def lap(self, name, exclude: float = 0.0):
         now = time.perf_counter()
-        self.t[name] = self.t.get(name, 0.0) + (now - self._last)
+        self.t[name] = self.t.get(name, 0.0) + (now - self._last) - exclude
         self._last = now
+
+    def add(self, name, seconds: float):
+        self.t[name] = self.t.get(name, 0.0) + seconds
 
 
 def _alloc_assignment(num_edges: int, out_path: str | None):
@@ -144,12 +164,14 @@ def compute_degrees_streaming(stream: EdgeStream, chunk_size: int, *,
     the host only prefetches + pads chunks while an O(|V|) device counter
     absorbs scatter-adds asynchronously.  Bit-identical to the host
     ``stream.compute_degrees`` sweep."""
+    tracer = get_tracer()
     deg = jnp.zeros((stream.num_vertices,), jnp.int32)
     it = stream.iter_chunks_prefetch(chunk_size, readahead)
     try:
-        for chunk in it:
-            pc = P.pad_chunk(chunk, chunk_size)
-            deg = _degree_fold(deg, pc.edges, pc.valid)
+        with tracer.span("pass:degrees", cat="engine"):
+            for chunk in it:
+                pc = P.pad_chunk(chunk, chunk_size)
+                deg = _degree_fold(deg, pc.edges, pc.valid)
     finally:
         if hasattr(it, "close"):
             it.close()              # joins the prefetch thread on error
@@ -228,13 +250,16 @@ class _TwoPSLPartitioner(StreamingPartitioner):
             degrees = compute_degrees_streaming(
                 stream, sp.chunk_size, readahead=sp.pipeline_depth - 1)
         timer.lap("degrees")
-        clus = streaming_clustering(stream, degrees, k=k,
-                                    max_vol_factor=sp.max_vol_factor,
-                                    passes=sp.cluster_passes,
-                                    chunk_size=sp.chunk_size,
-                                    readahead=sp.pipeline_depth - 1)
+        with get_tracer().span("pass:clustering", cat="engine",
+                               passes=sp.cluster_passes):
+            clus = streaming_clustering(stream, degrees, k=k,
+                                        max_vol_factor=sp.max_vol_factor,
+                                        passes=sp.cluster_passes,
+                                        chunk_size=sp.chunk_size,
+                                        readahead=sp.pipeline_depth - 1)
         timer.lap("clustering")
-        c2p, part_vol = map_clusters_lpt(clus.vol, k)
+        with get_tracer().span("mapping", cat="engine"):
+            c2p, part_vol = map_clusters_lpt(clus.vol, k)
         timer.lap("mapping")
         self._clus, self._part_vol = clus, part_vol
         # pre-partitioning only WRITES replication state -> fold it on the
@@ -457,9 +482,31 @@ def build_partitioner(spec: PartitionerSpec) -> StreamingPartitioner:
 # the one driver
 # ---------------------------------------------------------------------------
 
+def _traced_chunks(it, tracer, stall):
+    """Wrap the raw chunk iterator so each read/decode is credited to the
+    prefetch stage *on whatever thread runs it* (the prefetch thread at
+    depth >= 2, inline on the main thread at depth 1)."""
+    i = 0
+    while True:
+        t0 = time.perf_counter()
+        try:
+            chunk = next(it)
+        except StopIteration:
+            return
+        dt = time.perf_counter() - t0
+        tracer.complete("read", "prefetch", dt, chunk=i)
+        stall.add("prefetch", dt)
+        yield chunk
+        i += 1
+
+
+_STREAM_END = object()
+
+
 def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
              out_path: str | None = None,
-             degrees: np.ndarray | None = None) -> PartitionRunResult:
+             degrees: np.ndarray | None = None,
+             tracer=None, metrics=None) -> PartitionRunResult:
     """Execute a PartitionerSpec over an edge stream (see module docstring
     for the pipeline model).
 
@@ -472,30 +519,64 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
     next to the flat ``PartitionQuality``; a nonzero ``dcn_penalty``
     additionally steers the scoring passes themselves (stateful specs).
 
+    ``tracer`` (``repro.obs.Tracer``) records per-chunk spans for every
+    pipeline stage (``read`` / ``queue_wait`` / ``dispatch`` /
+    ``device_wait`` / ``writeback`` plus the ``pass:*`` envelopes) and
+    attaches the ``PipelineStallReport`` as
+    ``extras['stall_report']``; ``metrics`` (``repro.obs.MetricsRegistry``)
+    accumulates edges/sec, chunks in flight, and replication-state bytes.
+    Both default to the process-global active instances (``use_tracer`` /
+    ``use_registry``), which are no-ops unless a caller activated them —
+    and a traced run is **bit-identical** to an untraced run: tracing only
+    observes the pipeline, never reorders it.
+
     Example::
 
         stream = InMemoryEdgeStream(edges)
         res = run_spec(spec_for("2psl", chunk_size=1 << 14), stream, k=32)
         res.quality.replication_factor   # the paper's RF
-        res.timings                      # {'degrees': ..., 'scoring': ...}
+        res.timings                      # {'degrees': ..., 'scoring': ...,
+                                         #  'writeback': ..., 'finalize': ...}
     """
+    tracer = get_tracer() if tracer is None else tracer
+    metrics = get_registry() if metrics is None else metrics
+    with use_tracer(tracer), use_registry(metrics):
+        return _run_spec_traced(spec, stream, k, out_path, degrees,
+                                tracer, metrics)
+
+
+def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
     part = build_partitioner(spec)
     timer = _Timer()
-    state = part.init_state(stream, k, timer, degrees)
+    with tracer.span("init", cat="engine", algorithm=spec.algorithm, k=k):
+        state = part.init_state(stream, k, timer, degrees)
     assignment = _alloc_assignment(stream.num_edges, out_path)
     depth = spec.pipeline_depth
+    inflight_gauge = metrics.gauge("engine.chunks_in_flight")
+    edges_ctr = metrics.counter("engine.edges_streamed")
+    chunks_ctr = metrics.counter("engine.chunks_total")
+    dispatch_hist = metrics.histogram("engine.dispatch_seconds")
+    writeback_hist = metrics.histogram("engine.writeback_seconds")
 
     pass_counts: dict[str, int] = {}
+    pass_stalls = []
+    passes_wall = 0.0
     for sp in part.passes():
         if sp.setup is not None:
-            state = sp.setup(state)
-        inflight: deque = deque()   # (lo, chunk_np, n, device asg)
+            with tracer.span("setup", cat="engine", phase=sp.phase):
+                state = sp.setup(state)
+        stall = StallClock()
+        inflight: deque = deque()   # (lo, chunk_np, n, device asg, index)
         assigned = 0
         lo = 0
+        wb_host = 0.0               # host-side writeback seconds this pass
 
         def _writeback():
-            nonlocal assigned
-            w_lo, w_chunk, w_n, w_asg = inflight.popleft()
+            nonlocal assigned, wb_host
+            w_lo, w_chunk, w_n, w_asg, w_i = inflight.popleft()
+            t0 = time.perf_counter()
+            w_asg = jax.block_until_ready(w_asg)
+            t1 = time.perf_counter()
             asg_np = np.asarray(w_asg)[:w_n]
             if sp.merge:
                 sel = asg_np >= 0
@@ -506,30 +587,80 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
                 assigned += int((asg_np >= 0).sum())
             if sp.host_fold is not None:
                 sp.host_fold(w_chunk, asg_np)
+            t2 = time.perf_counter()
+            tracer.complete("device_wait", "writeback", t1 - t0, chunk=w_i)
+            tracer.complete("writeback", "writeback", t2 - t1, chunk=w_i)
+            stall.add("writeback", t2 - t0)
+            stall.attribute("device_wait", t1 - t0)
+            stall.attribute("host_write", t2 - t1)
+            writeback_hist.observe(t2 - t0)
+            wb_host += t2 - t1
 
-        it = stream.iter_chunks_prefetch(spec.chunk_size,
-                                         readahead=depth - 1)
+        # wrap the raw iterator (prefetch-stage attribution in the
+        # producer thread), then apply the engine's bounded readahead —
+        # identical chunk sequence to stream.iter_chunks_prefetch
+        it = prefetch(_traced_chunks(stream.iter_chunks(spec.chunk_size),
+                                     tracer, stall),
+                      readahead=depth - 1)
+        ci = 0
         try:
-            for chunk in it:
-                pc = P.pad_chunk(chunk, spec.chunk_size)
-                state, asg = sp.chunk_fn(state, pc)
-                inflight.append((lo, chunk, pc.n, asg))
-                lo += pc.n
-                while len(inflight) >= depth:
+            with tracer.span(f"pass:{sp.phase}", cat="engine",
+                             depth=depth, merge=sp.merge):
+                while True:
+                    tq = time.perf_counter()
+                    chunk = next(it, _STREAM_END)
+                    wait = time.perf_counter() - tq
+                    tracer.complete("queue_wait", "dispatch", wait, chunk=ci)
+                    stall.attribute("queue_wait", wait)
+                    if chunk is _STREAM_END:
+                        break
+                    td = time.perf_counter()
+                    pc = P.pad_chunk(chunk, spec.chunk_size)
+                    state, asg = sp.chunk_fn(state, pc)
+                    dt = time.perf_counter() - td
+                    tracer.complete("dispatch", "dispatch", dt, chunk=ci)
+                    stall.add("dispatch", dt)
+                    dispatch_hist.observe(dt)
+                    inflight.append((lo, chunk, pc.n, asg, ci))
+                    inflight_gauge.set(len(inflight))
+                    edges_ctr.inc(pc.n)
+                    chunks_ctr.inc()
+                    lo += pc.n
+                    ci += 1
+                    while len(inflight) >= depth:
+                        _writeback()
+                while inflight:
                     _writeback()
+                tdr = time.perf_counter()
+                jax.block_until_ready(state)
+                drain = time.perf_counter() - tdr
+                tracer.complete("device_wait", "writeback", drain,
+                                drain=True)
+                stall.attribute("device_wait", drain)
         finally:
             if hasattr(it, "close"):
                 it.close()          # joins the prefetch thread on error
-        while inflight:
-            _writeback()
-        jax.block_until_ready(state)
-        timer.lap(sp.phase)
+        timer.lap(sp.phase, exclude=wb_host)
+        timer.add("writeback", wb_host)
         pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + assigned
+        ps = stall.report(sp.phase)
+        pass_stalls.append(ps)
+        passes_wall += ps.wall_seconds
 
-    bits, sizes, extras = part.finalize(state, pass_counts)
-    sizes_np = np.asarray(sizes)
-    bits_np = np.asarray(bits)
-    quality = quality_from_bitmatrix(bits_np, sizes_np, stream.num_edges)
+    with tracer.span("finalize", cat="engine"):
+        bits, sizes, extras = part.finalize(state, pass_counts)
+        sizes_np = np.asarray(sizes)
+        bits_np = np.asarray(bits)
+        quality = quality_from_bitmatrix(bits_np, sizes_np,
+                                         stream.num_edges)
+    timer.lap("finalize")
+    metrics.gauge("engine.replication_state_bytes").set(bits_np.nbytes)
+    if passes_wall > 0:
+        metrics.gauge("engine.edges_per_sec").set(
+            edges_ctr.value / passes_wall if metrics.enabled else 0.0)
+    if tracer.enabled:
+        extras["stall_report"] = PipelineStallReport(
+            passes=pass_stalls).to_dict()
     if getattr(part, "num_hosts", 0):
         # hierarchy-aware quality: how many host groups each vertex spans
         # (== the DCN synchronization volume a host-grouped halo exchange

@@ -45,6 +45,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
+
 
 def normalize_host_groups(k: int, host_groups) -> tuple[tuple[int, ...], ...]:
     """``host_groups`` (an int host count, or explicit groups) -> the
@@ -175,6 +177,11 @@ def host_plan_from_halo(plan, host_groups) -> HostHaloPlan:
     in-memory/streamed planners therefore stay bit-identical by
     construction (they already agree on the base plan)."""
     groups = normalize_host_groups(plan.k, host_groups)
+    with obs.get_tracer().span("host_plan", cat="halo", num_hosts=len(groups)):
+        return _host_plan_from_halo(plan, groups)
+
+
+def _host_plan_from_halo(plan, groups) -> HostHaloPlan:
     h, d = len(groups), len(groups[0])
     k, b_cap = plan.k, plan.b_cap
     host_of = np.repeat(np.arange(h, dtype=np.int32), d)
@@ -232,10 +239,18 @@ def host_plan_from_halo(plan, host_groups) -> HostHaloPlan:
                 unled &= ~lead
             assert not unled.any(), "lane vertex with no holder in host"
 
-    return HostHaloPlan(
+    hp = HostHaloPlan(
         base=plan, num_hosts=h, parts_per_host=d, hb_cap=hb_cap,
         host_of=host_of, intra_send=intra_send, intra_recv=intra_recv,
         hsend_idx=hsend, hrecv_idx=hrecv, host_pair_sizes=host_pair_sizes)
+    reg = obs.get_registry()
+    if reg.enabled:
+        s = hp.dcn_summary()
+        reg.gauge("halo.dcn_rows_aggregated").set(s["dcn_rows_aggregated"])
+        reg.gauge("halo.dcn_rows_naive").set(s["dcn_rows_naive"])
+        reg.gauge("halo.intra_rows").set(
+            int((hp.intra_send >= 0).sum()))
+    return hp
 
 
 def split_mesh_axes(mesh, num_hosts: int) -> tuple[tuple, tuple]:

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.models import layers as L
 from repro.optim.schedules import linear_warmup_cosine
 from repro.training import make_train_step
@@ -176,18 +177,21 @@ def _plan_core(chunks, V, k, pair_cap_quantile):
 def plan_capacities(edges, assignment, V, k, pair_cap_quantile=1.0) -> dict:
     """Capacities of the halo plan WITHOUT materializing the padded arrays
     — cheap enough to run at manifest-writing time on huge graphs."""
-    return _capacities(
-        _plan_core(_inmemory_chunks(edges, assignment), V, k,
-                   pair_cap_quantile), k)
+    with obs.get_tracer().span("halo_capacities", cat="halo", k=k):
+        return _capacities(
+            _plan_core(_inmemory_chunks(edges, assignment), V, k,
+                       pair_cap_quantile), k)
 
 
 def plan_capacities_stream(stream, assignment, V, k, pair_cap_quantile=1.0,
                            chunk_size: int = 1 << 20) -> dict:
     """``plan_capacities`` over an ``EdgeStream`` + assignment memmap —
     one chunked sweep, O(chunk + plan) peak memory."""
-    return _capacities(
-        _plan_core(_stream_chunks(stream, assignment, chunk_size), V, k,
-                   pair_cap_quantile), k)
+    with obs.get_tracer().span("halo_capacities", cat="halo", k=k,
+                               streamed=True):
+        return _capacities(
+            _plan_core(_stream_chunks(stream, assignment, chunk_size), V, k,
+                       pair_cap_quantile), k)
 
 
 def _capacities(c: dict, k: int) -> dict:
@@ -239,10 +243,11 @@ def plan_halo_exchange(edges, assignment, V, k,
     ``host_groups`` (a host count or explicit contiguous groups, see
     ``dist.multihost``) switches to the host-grouped DCN-aware layout and
     returns a ``HostHaloPlan`` wrapping the identical base plan."""
-    chunks = _inmemory_chunks(edges, assignment)
-    plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
-                       chunks, V, k)
-    return _maybe_host_plan(plan, host_groups)
+    with obs.get_tracer().span("halo_plan", cat="halo", k=k):
+        chunks = _inmemory_chunks(edges, assignment)
+        plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+                           chunks, V, k)
+        return _maybe_host_plan(plan, host_groups)
 
 
 def plan_halo_exchange_stream(stream, assignment, V, k, *,
@@ -257,10 +262,12 @@ def plan_halo_exchange_stream(stream, assignment, V, k, *,
     ``host_groups`` behaves exactly as in ``plan_halo_exchange`` (the host
     re-slicing is a pure table transform of the finished base plan, so the
     streamed host plan is bit-identical to the in-memory one too)."""
-    chunks = _stream_chunks(stream, assignment, chunk_size)
-    plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
-                       chunks, V, k)
-    return _maybe_host_plan(plan, host_groups)
+    with obs.get_tracer().span("halo_plan", cat="halo", k=k,
+                               streamed=True):
+        chunks = _stream_chunks(stream, assignment, chunk_size)
+        plan = _build_plan(_plan_core(chunks, V, k, pair_cap_quantile),
+                           chunks, V, k)
+        return _maybe_host_plan(plan, host_groups)
 
 
 def _maybe_host_plan(plan, host_groups):
@@ -327,6 +334,10 @@ def _build_plan(c: dict, chunks, V, k) -> HaloPlan:
         ov_idx[parts[m], np.searchsorted(ov, verts[m])] = \
             local_of[m].astype(np.int32)
 
+    # pairwise exchange volume (rows shipped per layer before any host
+    # aggregation) — the ICI-side twin of HostHaloPlan.dcn_summary
+    obs.get_registry().gauge("halo.boundary_rows").set(
+        int((send_idx >= 0).sum()))
     return HaloPlan(
         k=int(k), v_cap=v_cap, e_cap=e_cap, b_cap=b_cap, o_cap=int(o_cap),
         edges=loc_edges, edge_mask=edge_mask, vmap_global=vmap_global,
@@ -407,33 +418,46 @@ def _halo_combine(x, *, send, recv, ov, axes, v_cap, psum_axes=None,
     from the unique leader replica, host-replicated (psum over ``axes``),
     exchanged once over the DCN ``host_axes``, and scatter-added into every
     local replica.  With a single host the extra tables are empty and this
-    is exactly the single-level combine."""
+    is exactly the single-level combine.
+
+    The whole reconciliation is wrapped in ``jax.named_scope`` blocks
+    (``halo_combine`` > ``overflow_gather`` / ``intra_all_to_all`` /
+    ``dcn_lanes`` / ``overflow_psum``), so a ``jax.profiler`` capture
+    (``--jax-profile`` on the launchers, or
+    ``repro.obs.jax_profiler_session``) attributes device time to the ICI
+    pairwise exchange vs the DCN aggregated lanes — the compile-time twin
+    of the host-side span tracer."""
     d = x.shape[-1]
     psum_axes = axes if psum_axes is None else psum_axes
     o_cap = ov.shape[0]
     if o_cap:                      # gather overflow partials BEFORE any add
-        ov_ok = ov >= 0
-        ov_buf = jnp.where(ov_ok[:, None], x[jnp.where(ov_ok, ov, 0)], 0.0)
-        ov_tot = jax.lax.psum(ov_buf, psum_axes)
+        with jax.named_scope("halo_combine.overflow_gather"):
+            ov_ok = ov >= 0
+            ov_buf = jnp.where(ov_ok[:, None],
+                               x[jnp.where(ov_ok, ov, 0)], 0.0)
+            ov_tot = jax.lax.psum(ov_buf, psum_axes)
     if send.shape[0] > 1 and send.shape[1] > 0:
-        s_ok = (send >= 0)[..., None]
-        buf = jnp.where(s_ok, x[jnp.where(send >= 0, send, 0)], 0.0)
-        buf = jax.lax.all_to_all(buf, axes, split_axis=0, concat_axis=0,
-                                 tiled=True)
-        r_idx = jnp.where(recv >= 0, recv, v_cap).reshape(-1)
-        x = x.at[r_idx].add(buf.reshape(-1, d), mode="drop")
+        with jax.named_scope("halo_combine.intra_all_to_all"):
+            s_ok = (send >= 0)[..., None]
+            buf = jnp.where(s_ok, x[jnp.where(send >= 0, send, 0)], 0.0)
+            buf = jax.lax.all_to_all(buf, axes, split_axis=0,
+                                     concat_axis=0, tiled=True)
+            r_idx = jnp.where(recv >= 0, recv, v_cap).reshape(-1)
+            x = x.at[r_idx].add(buf.reshape(-1, d), mode="drop")
     if hsend is not None and hsend.shape[0] > 1 and hsend.shape[1] > 0:
         # x now holds host partials; leaders contribute them once per lane
-        h_ok = (hsend >= 0)[..., None]
-        hbuf = jnp.where(h_ok, x[jnp.where(hsend >= 0, hsend, 0)], 0.0)
-        if axes:                   # host-replicate the aggregated lane
-            hbuf = jax.lax.psum(hbuf, axes)
-        hbuf = jax.lax.all_to_all(hbuf, host_axes, split_axis=0,
-                                  concat_axis=0, tiled=True)
-        r_idx = jnp.where(hrecv >= 0, hrecv, v_cap).reshape(-1)
-        x = x.at[r_idx].add(hbuf.reshape(-1, d), mode="drop")
+        with jax.named_scope("halo_combine.dcn_lanes"):
+            h_ok = (hsend >= 0)[..., None]
+            hbuf = jnp.where(h_ok, x[jnp.where(hsend >= 0, hsend, 0)], 0.0)
+            if axes:               # host-replicate the aggregated lane
+                hbuf = jax.lax.psum(hbuf, axes)
+            hbuf = jax.lax.all_to_all(hbuf, host_axes, split_axis=0,
+                                      concat_axis=0, tiled=True)
+            r_idx = jnp.where(hrecv >= 0, hrecv, v_cap).reshape(-1)
+            x = x.at[r_idx].add(hbuf.reshape(-1, d), mode="drop")
     if o_cap:
-        x = x.at[jnp.where(ov >= 0, ov, v_cap)].set(ov_tot, mode="drop")
+        with jax.named_scope("halo_combine.overflow_psum"):
+            x = x.at[jnp.where(ov >= 0, ov, v_cap)].set(ov_tot, mode="drop")
     return x
 
 

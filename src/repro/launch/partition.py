@@ -36,13 +36,22 @@ Outputs, from lightest to heaviest:
                           time instead of only aggregating them afterward
                           (stateful algorithms only; 0 = flat scoring,
                           bit-identical to omitting the flag).
+
+Observability (``repro.obs``, see docs/observability.md): ``--trace
+out.json`` records every pipeline stage, halo-planning step, and pass as
+Chrome ``trace_event`` spans (open in Perfetto), ``--trace-summary``
+prints the per-stage stall table, and ``--jax-profile DIR`` additionally
+captures a ``jax.profiler`` device trace.  Traced runs are bit-identical
+to untraced runs.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 
+from repro import obs
 from repro.core import (MemmapEdgeStream, PartitionArtifact,
                         SPEC_REGISTRY, ThrottledEdgeStream, run_spec,
                         spec_for)
@@ -77,14 +86,16 @@ def main(argv=None):
                          "reports the cross-host replication factor, "
                          "enables --dcn-penalty, and with --artifact-dir "
                          "also persists the host-grouped (DCN-aware) "
-                         "exchange layout downstream SPMD steps run as "
-                         "the two-level intra-host all_to_all + "
-                         "aggregated inter-host lane exchange")
+                         "two-level exchange layout described in "
+                         "docs/multihost.md; with --trace the DCN vs ICI "
+                         "lane-row gauges land in the trace metadata")
     ap.add_argument("--dcn-penalty", type=float, default=0.0,
                     help="with --hosts: hierarchy-aware scoring penalty "
                          "per endpoint missing from a candidate's host "
                          "group (stateful algorithms only; 0 = flat "
-                         "scoring, bit-identical to the default)")
+                         "scoring, bit-identical to the default; see "
+                         "docs/multihost.md — compare dcn_rows_aggregated "
+                         "across --trace runs to measure the shrink)")
     ap.add_argument("--plan-json", default=None,
                     help="write a DGL-style partition manifest (halo-plan "
                          "capacities + replication factor) to this path; "
@@ -102,6 +113,19 @@ def main(argv=None):
                          "over-cap pairs to the psum overflow lane)")
     ap.add_argument("--throttle-mbps", type=float, default=None,
                     help="simulate a storage device with this read rate")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record spans (pipeline stages per chunk, halo "
+                         "planning, passes) and metrics to a Chrome "
+                         "trace_event JSON at PATH — open in Perfetto; "
+                         "bit-identical output (docs/observability.md)")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="print the per-stage stall table (busy/idle "
+                         "fractions, critical stage) after the run; "
+                         "implies tracing, goes to stderr under --json")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="additionally capture a jax.profiler device "
+                         "trace into DIR (view with tensorboard or "
+                         "Perfetto; no-op if the profiler is unavailable)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
     if args.hosts is not None and args.artifact_dir and args.no_plan:
@@ -135,52 +159,78 @@ def main(argv=None):
         # stream the assignment straight into the artifact layout
         os.makedirs(args.artifact_dir, exist_ok=True)
         out_path = os.path.join(args.artifact_dir, ASSIGNMENT_FILE)
-    res = run_spec(spec, stream, args.k, out_path=out_path)
 
-    report = {
-        "algorithm": res.name, "k": args.k,
-        "edges": stream.num_edges, "vertices": stream.num_vertices,
-        "replication_factor": res.quality.replication_factor,
-        "alpha_measured": res.quality.balance,
-        "timings_s": {k: round(v, 3) for k, v in res.timings.items()},
-        "simulated_io_s": round(res.simulated_io_seconds, 3),
-        **{k: v for k, v in res.extras.items()
-           if isinstance(v, (int, float, str))},
-    }
-    plan = None
-    if args.artifact_dir:
-        # out-of-core planning: re-stream the graph chunk by chunk against
-        # the just-written assignment memmap (planning pays no simulated
-        # IO, so hand it the raw memmap stream)
-        plan_stream = (None if args.no_plan else
-                       MemmapEdgeStream(args.input,
-                                        num_vertices=stream.num_vertices))
-        art = PartitionArtifact.save(
-            args.artifact_dir, res, num_vertices=stream.num_vertices,
-            num_edges=stream.num_edges, stream=plan_stream,
-            pair_cap_quantile=args.pair_cap_quantile,
-            host_groups=args.hosts, graph_path=args.input)
-        report["artifact_dir"] = args.artifact_dir
-        if art.has_halo_plan():
-            plan = art.halo_plan()
-            report["b_cap"] = plan.b_cap
-        if art.has_host_plan():
-            report["host_plan"] = art.host_halo_plan().dcn_summary()
-    if args.plan_json:
-        # reuse the plan computed for the artifact (same quantile) rather
-        # than running the O(|E|) planning core a second time
-        manifest = _partition_manifest(args, res, stream, plan, out_path)
-        with open(args.plan_json, "w") as f:
-            json.dump(manifest, f, indent=2)
-        report["plan_json"] = args.plan_json
-        report["v_cap"] = manifest["halo_plan"]["v_cap"]
-        report["b_cap"] = manifest["halo_plan"]["b_cap"]
+    # tracing covers the whole run — partitioning passes AND the halo /
+    # host planning the artifact save triggers — so the artifact manifest
+    # carries the stall report and the trace shows planning spans too
+    traced = bool(args.trace or args.trace_summary or args.jax_profile)
+    tracer = obs.Tracer() if traced else obs.NULL_TRACER
+    registry = obs.MetricsRegistry() if traced else obs.NULL_REGISTRY
+    with obs.jax_profiler_session(args.jax_profile), \
+            obs.use_tracer(tracer), obs.use_registry(registry):
+        res = run_spec(spec, stream, args.k, out_path=out_path)
+
+        report = {
+            "algorithm": res.name, "k": args.k,
+            "edges": stream.num_edges, "vertices": stream.num_vertices,
+            "replication_factor": res.quality.replication_factor,
+            "alpha_measured": res.quality.balance,
+            "timings_s": {k: round(v, 3) for k, v in res.timings.items()},
+            "simulated_io_s": round(res.simulated_io_seconds, 3),
+            **{k: v for k, v in res.extras.items()
+               if isinstance(v, (int, float, str))},
+        }
+        plan = None
+        if args.artifact_dir:
+            # out-of-core planning: re-stream the graph chunk by chunk
+            # against the just-written assignment memmap (planning pays no
+            # simulated IO, so hand it the raw memmap stream)
+            plan_stream = (None if args.no_plan else
+                           MemmapEdgeStream(
+                               args.input,
+                               num_vertices=stream.num_vertices))
+            art = PartitionArtifact.save(
+                args.artifact_dir, res, num_vertices=stream.num_vertices,
+                num_edges=stream.num_edges, stream=plan_stream,
+                pair_cap_quantile=args.pair_cap_quantile,
+                host_groups=args.hosts, graph_path=args.input)
+            report["artifact_dir"] = args.artifact_dir
+            if art.has_halo_plan():
+                plan = art.halo_plan()
+                report["b_cap"] = plan.b_cap
+            if art.has_host_plan():
+                report["host_plan"] = art.host_halo_plan().dcn_summary()
+        if args.plan_json:
+            # reuse the plan computed for the artifact (same quantile)
+            # rather than running the O(|E|) planning core a second time
+            manifest = _partition_manifest(args, res, stream, plan,
+                                           out_path)
+            with open(args.plan_json, "w") as f:
+                json.dump(manifest, f, indent=2)
+            report["plan_json"] = args.plan_json
+            report["v_cap"] = manifest["halo_plan"]["v_cap"]
+            report["b_cap"] = manifest["halo_plan"]["b_cap"]
+
+    stall = res.extras.get("stall_report")
+    if stall is not None:
+        report["critical_stage"] = stall["critical_stage"]
+    if args.trace:
+        obs.write_chrome_trace(args.trace, tracer, metadata={
+            "spec": spec.to_dict(), "k": args.k, "input": args.input,
+            "metrics": registry.snapshot()})
+        report["trace"] = args.trace
+    if args.jax_profile:
+        report["jax_profile"] = args.jax_profile
 
     if args.json:
         print(json.dumps(report, indent=2))
     else:
         for k, v in report.items():
             print(f"{k:24s} {v}")
+    if args.trace_summary and stall is not None:
+        # under --json keep stdout machine-parseable: table -> stderr
+        table = obs.trace_summary_table(stall, registry.snapshot())
+        print(table, file=sys.stderr if args.json else sys.stdout)
 
 
 def _partition_manifest(args, res, stream, plan=None,

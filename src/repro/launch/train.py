@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_arch
 from repro.launch import steps as S
@@ -84,10 +85,24 @@ def main(argv=None):
     ap.add_argument("--batch-size", type=int, default=None)
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-step train_step spans (plus restart/"
+                         "straggler instants) to a Chrome trace_event "
+                         "JSON at PATH — see docs/observability.md")
     args = ap.parse_args(argv)
+
+    tracer = obs.Tracer() if args.trace else obs.NULL_TRACER
 
     state, step, batch_fn = build_trainer(
         args.arch, smoke=not args.full, batch_size=args.batch_size)
+    if tracer.enabled:
+        inner_step = step
+
+        def step(st, batch):
+            with tracer.span("train_step", cat="launch"):
+                out = inner_step(st, batch)
+                jax.block_until_ready(out[0])
+            return out
     ckpt = CheckpointManager(args.ckpt_dir, interval=args.ckpt_interval)
     injector = (FailureInjector([args.inject_failure_at])
                 if args.inject_failure_at is not None else None)
@@ -102,7 +117,13 @@ def main(argv=None):
     else:
         start = 0
 
-    state, metrics = runner.run(state, args.steps, start_step=start)
+    with obs.use_tracer(tracer):
+        state, metrics = runner.run(state, args.steps, start_step=start)
+    if args.trace:
+        obs.write_chrome_trace(args.trace, tracer,
+                               metadata={"arch": args.arch,
+                                         "steps": args.steps})
+        print(f"trace written to {args.trace}")
     losses = [float(m["loss"]) for m in metrics]
     print(f"arch={args.arch} steps={len(metrics)} "
           f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "

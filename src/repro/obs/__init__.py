@@ -1,0 +1,35 @@
+"""``repro.obs`` — lightweight, always-compilable observability.
+
+Three components (see docs/observability.md for the user guide):
+
+* **span tracer** (``trace``): nested thread-aware spans over the
+  engine's pipeline stages, halo planning, and launcher steps; a no-op
+  when disabled, and a traced run is bit-identical to an untraced one.
+* **stall attribution** (``stall``): per-chunk queue-wait / compute /
+  device-wait accounting rolled into a ``PipelineStallReport`` (the
+  signal behind adaptive ``pipeline_depth``).
+* **metrics registry** (``metrics``): counters / gauges / histograms
+  (edges/sec, chunks in flight, replication-state bytes, DCN vs ICI
+  lane rows) with a JSON-safe snapshot.
+
+``export`` turns a tracer into Chrome ``trace_event`` JSON (Perfetto),
+renders the ``--trace-summary`` table, and hosts the optional
+``jax.profiler`` session hook.
+"""
+from .export import (TraceValidationError, chrome_trace,
+                     jax_profiler_session, trace_summary_table,
+                     validate_chrome_trace, write_chrome_trace)
+from .metrics import (NULL_REGISTRY, Counter, Gauge, Histogram,
+                      MetricsRegistry, NullRegistry, get_registry,
+                      use_registry)
+from .stall import STAGES, PassStall, PipelineStallReport, StallClock
+from .trace import NULL_TRACER, NullTracer, Tracer, get_tracer, use_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
+    "NULL_REGISTRY", "get_registry", "use_registry",
+    "NullTracer", "NULL_TRACER", "Tracer", "get_tracer", "use_tracer",
+    "STAGES", "PassStall", "PipelineStallReport", "StallClock",
+    "TraceValidationError", "chrome_trace", "jax_profiler_session",
+    "trace_summary_table", "validate_chrome_trace", "write_chrome_trace",
+]
