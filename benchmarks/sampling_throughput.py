@@ -1,0 +1,166 @@
+"""Sampling + serving throughput: edges sampled/sec and cache hit-rates.
+
+Measures the ``repro.sample`` serving pipeline against a freshly
+partitioned artifact: (1) minibatch sampling throughput (edges
+sampled/sec through ``PartitionedNeighborSampler``, fixed-fanout and
+full-fan-out), and (2) the hot-vertex feature cache's hit-rate as a
+function of its byte budget under a skewed (degree-proportional) request
+stream — the HEP-style lever: how few resident bytes buy how much of the
+cross-partition feature traffic.
+
+Results merge into ``BENCH_engine.json`` under a ``sampling`` key (the
+engine rows are left untouched), extending the perf trajectory to the
+serving side.
+
+    PYTHONPATH=src python -m benchmarks.sampling_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import InMemoryEdgeStream, PartitionArtifact, run_spec
+from repro.sample import (HotVertexFeatureCache, PartitionedGraph,
+                          PartitionedNeighborSampler, build_local_graphs)
+
+from .common import bench_spec
+
+SCHEMA_VERSION = 1
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+
+#: cache byte budgets swept (per-row cost = d_feat * 4 bytes)
+BUDGET_SWEEP = (1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18)
+FANOUT_CONFIGS = {"fanout-10x10": (10, 10), "fanout-15x10x5": (15, 10, 5),
+                  "full-2hop": (-1, -1)}
+D_FEAT = 64
+
+
+def _bench_graph(smoke: bool):
+    from repro.data import rmat_graph
+    scale = 10 if smoke else 14
+    edges = rmat_graph(scale, edge_factor=16, seed=3)
+    return InMemoryEdgeStream(np.asarray(edges, np.int64))
+
+
+def _make_artifact(stream, k: int, workdir: str):
+    res = run_spec(bench_spec("2psl"), stream, k)
+    art = PartitionArtifact.save(
+        workdir, res, num_vertices=stream.num_vertices,
+        num_edges=stream.num_edges, edges=np.asarray(stream.edges))
+    build_local_graphs(art, edges=np.asarray(stream.edges))
+    return art
+
+
+def bench_sampling(pg, V, *, repeats: int, batches: int, roots_per: int):
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, fanouts in FANOUT_CONFIGS.items():
+        sampler = PartitionedNeighborSampler(pg, fanouts, seed=1)
+        roots = rng.integers(0, V, size=(batches, roots_per))
+        sampler.sample(roots[0])                    # warm-up
+        times, edges_total = [], 0
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            edges_total = 0
+            for b in range(batches):
+                out = sampler.sample(roots[b])
+                edges_total += out["stats"]["local_edges"] \
+                    + out["stats"]["halo_edges"]
+            times.append(time.perf_counter() - t0)
+        dt = float(np.mean(times))
+        rows.append({
+            "config": name, "fanouts": list(fanouts),
+            "batches": batches, "roots_per_batch": roots_per,
+            "edges_sampled": edges_total,
+            "seconds": round(dt, 6),
+            "edges_sampled_per_sec": round(edges_total / dt, 1),
+            "minibatches_per_sec": round(batches / dt, 1),
+        })
+    return rows
+
+
+def bench_cache_sweep(pg, V, degrees, *, requests: int, batch: int):
+    """Hit-rate vs byte budget under a degree-skewed request stream (the
+    serving assumption: hot vertices are the high-degree ones)."""
+    rng = np.random.default_rng(7)
+    p = (degrees + 1.0) / (degrees + 1.0).sum()
+    stream_ids = rng.choice(V, size=(requests, batch), p=p)
+    feats = np.zeros((V, D_FEAT), np.float32)
+    rows = []
+    for budget in BUDGET_SWEEP:
+        cache = HotVertexFeatureCache(lambda g: feats[g], D_FEAT,
+                                      byte_budget=budget, degrees=degrees)
+        for r in range(requests):
+            cache.get(stream_ids[r])
+        st = cache.stats()
+        rows.append({
+            "byte_budget": budget,
+            "capacity_rows": st["capacity_rows"],
+            "resident_fraction": round(st["capacity_rows"] / V, 4),
+            "hit_rate": round(st["hit_rate"], 4),
+            "evictions": st["evictions"],
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph, 1 repeat (CI schema check)")
+    args = ap.parse_args(argv)
+    repeats = 1 if args.smoke else args.repeats
+    batches = 8 if args.smoke else 64
+    requests = 16 if args.smoke else 256
+
+    stream = _bench_graph(args.smoke)
+    with tempfile.TemporaryDirectory() as d:
+        art = _make_artifact(stream, args.k, d)
+        pg = PartitionedGraph.load(art)
+        V = stream.num_vertices
+        degrees = pg.degrees()
+        sampling = bench_sampling(pg, V, repeats=repeats, batches=batches,
+                                  roots_per=32)
+        sweep = bench_cache_sweep(pg, V, degrees, requests=requests,
+                                  batch=64)
+        rf = art.manifest["replication_factor"]
+
+    section = {
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": int(time.time()),
+        "graph": {"edges": stream.num_edges, "vertices": V},
+        "k": args.k,
+        "replication_factor": rf,
+        "feat_dim": D_FEAT,
+        "throughput": sampling,
+        "cache_sweep": sweep,
+    }
+    # merge, never overwrite: the engine rows own the rest of the file
+    doc = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            doc = json.load(f)
+    doc["sampling"] = section
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote sampling section -> {args.out}")
+    for r in sampling:
+        print(f"  {r['config']:16s} {r['edges_sampled_per_sec']:>12.0f} "
+              f"edges/s  {r['minibatches_per_sec']:>8.1f} mb/s")
+    for r in sweep:
+        print(f"  cache {r['byte_budget']:>8d}B resident "
+              f"{r['resident_fraction']:.3f} hit-rate {r['hit_rate']:.3f}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

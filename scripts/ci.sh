@@ -104,6 +104,34 @@ print(f"bench smoke OK: geomean {s['geomean_best_speedup']}x over the "
       f"synchronous engine (tiny graph — schema check, not a perf gate)")
 PY
 
+# ---- serve-smoke stage: lower the artifact into per-partition serving
+# structure (--local-graphs, artifact format v3), sample ego-networks, and
+# answer GNN inference through serve_gnn with the hot-vertex cache — the
+# JSON report must show latency percentiles and a nonzero cache hit-rate -
+python -m repro.launch.partition \
+    --input "$smoke_dir/graph.bin" --k 4 --algorithm 2psl \
+    --chunk-size 256 --artifact-dir "$smoke_dir/artifact_serve" \
+    --local-graphs --json > /dev/null
+python -m repro.launch.serve --gnn-artifact "$smoke_dir/artifact_serve" \
+    --requests 8 --roots-per 3 --json > "$smoke_dir/serve.json"
+python - "$smoke_dir" <<'PY'
+import json, sys
+import numpy as np
+from repro.core import PartitionArtifact
+from repro.sample import PartitionedGraph, PartitionedNeighborSampler
+art = PartitionArtifact.load(sys.argv[1] + "/artifact_serve")
+assert art.manifest["format_version"] == 3 and art.has_local_graphs()
+pg = PartitionedGraph.load(art)
+out = PartitionedNeighborSampler(pg, (-1, -1)).sample(np.arange(4))
+assert out["edge_mask"].sum() > 0
+rep = json.loads(open(sys.argv[1] + "/serve.json").read()
+                 .strip().splitlines()[-1])
+assert rep["mode"] == "gnn" and rep["p99_ms"] >= rep["p50_ms"] > 0
+assert rep["cache"]["hit_rate"] > 0, rep["cache"]
+print(f"serve smoke OK: p50 {rep['p50_ms']}ms p99 {rep['p99_ms']}ms "
+      f"cache hit-rate {rep['cache']['hit_rate']}")
+PY
+
 # ---- docs stage: README.md + docs/*.md must exist and their '# doc-test'
 # tagged fenced python blocks must execute (examples cannot rot) ----------
 python scripts/doc_tests.py

@@ -23,7 +23,10 @@ to a fresh ``plan_halo_exchange`` without touching the edge stream.
 ``artifact.host_halo_plan()`` does the same for the host-grouped layout.
 
 Format history: v1 (PR 2) had no host plan; v2 adds the optional
-``host_plan`` manifest block + ``.npz``.  v1 artifacts still load.
+``host_plan`` manifest block + ``.npz``; v3 adds the optional
+``local_graphs`` block pointing at per-partition ``local_csc_p{i}.npz``
+serving structure (``repro.sample.local_graph``).  v1/v2 artifacts still
+load unchanged.
 """
 from __future__ import annotations
 
@@ -41,8 +44,8 @@ ASSIGNMENT_FILE = "assignment.bin"
 MANIFEST_FILE = "manifest.json"
 HALO_PLAN_FILE = "halo_plan.npz"
 HOST_PLAN_FILE = "host_plan.npz"
-FORMAT_VERSION = 2
-SUPPORTED_VERSIONS = (1, 2)
+FORMAT_VERSION = 3
+SUPPORTED_VERSIONS = (1, 2, 3)
 
 #: HaloPlan fields that are plain ints/floats (stored as 0-d npz entries).
 _PLAN_SCALARS = ("k", "v_cap", "e_cap", "b_cap", "o_cap",
@@ -67,6 +70,7 @@ class PartitionArtifact:
     _assignment: np.ndarray | None = None
     _plan: object | None = None            # cached HaloPlan
     _host_plan: object | None = None       # cached HostHaloPlan
+    _local_graphs: dict | None = None      # cached {part_id: LocalGraph}
 
     # -- accessors -------------------------------------------------------
     @property
@@ -136,6 +140,44 @@ class PartitionArtifact:
                            for name in _HOST_SCALARS})
             self._host_plan = HostHaloPlan(base=self.halo_plan(), **kw)
         return self._host_plan
+
+    def has_local_graphs(self) -> bool:
+        """True when per-partition serving structure is registered
+        (format v3 ``local_graphs`` manifest block)."""
+        return self.manifest.get("local_graphs") is not None
+
+    def local_graph(self, part_id: int):
+        """Load partition ``part_id``'s ``LocalGraph`` (cached).
+
+        Requires ``repro.sample.build_local_graphs`` (or the CLI's
+        ``--local-graphs``) to have run against this artifact."""
+        if not self.has_local_graphs():
+            raise FileNotFoundError(
+                f"{self.path} has no local serving structure; run "
+                f"repro.sample.build_local_graphs(artifact) or partition "
+                f"with --local-graphs")
+        if self._local_graphs is None:
+            self._local_graphs = {}
+        if part_id not in self._local_graphs:
+            from repro.sample.local_graph import LocalGraph
+            fname = self.manifest["local_graphs"]["files"][part_id]
+            self._local_graphs[part_id] = LocalGraph.load(
+                os.path.join(self.path, fname))
+        return self._local_graphs[part_id]
+
+    def register_local_graphs(self, meta: dict) -> None:
+        """Record the ``local_graphs`` block and rewrite the manifest.
+
+        Called by ``repro.sample.build_local_graphs`` after the per-
+        partition ``.npz`` files land next to the manifest; bumps the
+        on-disk format to v3 (older artifacts upgrade in place — v3
+        readers treat an absent block exactly like a v2 artifact)."""
+        self.manifest["local_graphs"] = meta
+        self.manifest["format_version"] = max(
+            int(self.manifest.get("format_version") or 1), 3)
+        self._local_graphs = None
+        with open(os.path.join(self.path, MANIFEST_FILE), "w") as f:
+            json.dump(self.manifest, f, indent=2)
 
     # -- persistence -----------------------------------------------------
     @classmethod
@@ -214,6 +256,7 @@ class PartitionArtifact:
             "stall_report": result.extras.get("stall_report"),
             "halo_plan": None,
             "host_plan": None,
+            "local_graphs": None,
         }
         if plan is not None:
             arrays = {f.name: getattr(plan, f.name)

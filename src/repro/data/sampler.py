@@ -1,10 +1,15 @@
 """Neighbor sampling for minibatch GNN training (GraphSAGE-style fan-out).
 
-Builds a CSR adjacency once, then draws fixed-shape k-hop samples: per batch
-of root nodes, hop h samples ``fanout[h]`` neighbors of every frontier node
-(with replacement when the degree is smaller, masked when degree is zero).
-Output is a padded subgraph batch in the shared GraphBatch dict format, so
-the same model code runs full-batch and sampled.
+Thin compatibility shim: the adjacency build lives in
+``repro.sample.local_graph.build_adjacency`` (the single CSR/CSC builder
+shared with the partition-aware serving sampler), and this module keeps
+the original single-graph ``CSRGraph`` / ``NeighborSampler`` API for the
+in-memory training path.  Partition-aware sampling against a
+``PartitionArtifact`` is ``repro.sample.PartitionedNeighborSampler``.
+
+Semantics note: this sampler walks *out*-adjacency (sampled edges are
+``(neighbor -> node)``); the serving sampler walks *in*-adjacency, the
+message direction.
 """
 from __future__ import annotations
 
@@ -21,12 +26,12 @@ class CSRGraph:
 
     @staticmethod
     def from_edges(edges: np.ndarray, num_nodes: int) -> "CSRGraph":
-        order = np.argsort(edges[:, 0], kind="stable")
-        sorted_e = edges[order]
-        counts = np.bincount(edges[:, 0], minlength=num_nodes)
-        indptr = np.zeros(num_nodes + 1, np.int64)
-        np.cumsum(counts, out=indptr[1:])
-        return CSRGraph(indptr=indptr, indices=sorted_e[:, 1].copy(),
+        from repro.sample.local_graph import build_adjacency
+        edges = np.asarray(edges)
+        indptr, order = build_adjacency(edges, num_nodes, by="src")
+        indices = (edges[order, 1].astype(np.int64) if len(order)
+                   else np.empty(0, np.int64))
+        return CSRGraph(indptr=indptr.astype(np.int64), indices=indices,
                         num_nodes=num_nodes)
 
     def degree(self, nodes):
@@ -54,7 +59,13 @@ class NeighborSampler:
             # sample with replacement: offset = floor(u * deg)
             u = self.rng.random((len(frontier), f))
             off = (u * np.maximum(deg, 1)[:, None]).astype(np.int64)
-            nbr = g.indices[g.indptr[frontier][:, None] + off]   # (F, f)
+            # zero-degree rows (incl. isolated trailing vertices, whose
+            # indptr slot can equal len(indices)) must not be gathered
+            rows = np.where(has[:, None], g.indptr[frontier][:, None] + off, 0)
+            if len(g.indices) == 0:
+                nbr = np.zeros_like(rows)
+            else:
+                nbr = g.indices[rows]                      # (F, f)
             src = np.where(has[:, None], nbr, -1)
             dst = np.repeat(frontier, f).reshape(len(frontier), f)
             all_src_g.append(src.reshape(-1))

@@ -79,6 +79,13 @@ def main(argv=None):
     ap.add_argument("--no-plan", action="store_true",
                     help="with --artifact-dir: skip the halo-plan arrays "
                          "(assignment + manifest only, no planning sweep)")
+    ap.add_argument("--local-graphs", action="store_true",
+                    help="with --artifact-dir: additionally lower the "
+                         "artifact into per-partition CSC/CSR serving "
+                         "structure (local_csc_p*.npz, manifest format "
+                         "v3) in one extra chunked sweep — what "
+                         "repro.launch.serve --gnn-artifact and the "
+                         "repro.sample sampler consume")
     ap.add_argument("--hosts", type=int, default=None,
                     help="lay the k partitions out on this many host "
                          "groups (must divide --k; partitions "
@@ -131,6 +138,8 @@ def main(argv=None):
     if args.hosts is not None and args.artifact_dir and args.no_plan:
         ap.error("--hosts with --artifact-dir persists the host plan, "
                  "which needs the halo plan --no-plan skips")
+    if args.local_graphs and not args.artifact_dir:
+        ap.error("--local-graphs lowers an artifact; pass --artifact-dir")
     if args.dcn_penalty and args.hosts is None:
         ap.error("--dcn-penalty needs --hosts (the penalty is defined per "
                  "host group)")
@@ -195,6 +204,13 @@ def main(argv=None):
                 pair_cap_quantile=args.pair_cap_quantile,
                 host_groups=args.hosts, graph_path=args.input)
             report["artifact_dir"] = args.artifact_dir
+            if args.local_graphs:
+                from repro.sample import build_local_graphs
+                graphs = build_local_graphs(
+                    art, stream=MemmapEdgeStream(
+                        args.input, num_vertices=stream.num_vertices),
+                    chunk_size=args.chunk_size)
+                report["local_graphs"] = len(graphs)
             if art.has_halo_plan():
                 plan = art.halo_plan()
                 report["b_cap"] = plan.b_cap

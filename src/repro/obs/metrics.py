@@ -19,6 +19,18 @@ instead of scraping prints.  Canonical instrument names:
     halo.dcn_rows_naive          gauge    rows a flat layout would ship
                                           cross-host
     halo.intra_rows              gauge    rows staying on ICI (intra-host)
+    sample.minibatches           counter  ego-network samples drawn
+    sample.edges_local           counter  sampled edges read from the
+                                          serving (home) partition
+    sample.edges_halo            counter  sampled edges read across a
+                                          halo replica boundary
+    sample.cache.hits            counter  feature rows served from the
+                                          hot-vertex cache
+    sample.cache.misses          counter  rows that paid the remote fetch
+    sample.cache.evictions       counter  LRU-overlay evictions
+    sample.local_graphs_built    gauge    partitions lowered to local CSC
+    serve.p50_ms / serve.p99_ms  gauge    request latency percentiles
+                                          (compile warm-up excluded)
 
 Instruments are get-or-create by name (``registry.counter("x")``), all
 updates are thread-safe, and ``registry.snapshot()`` returns plain dicts.

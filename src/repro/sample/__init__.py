@@ -1,0 +1,28 @@
+"""``repro.sample`` — partition-aware minibatch sampling + serving.
+
+The partitioner's output becomes a serving story here (the ROADMAP's
+"GraphBolt-style" item): a ``PartitionArtifact`` is lowered once into
+per-partition CSC/CSR local structure (``local_graph``, persisted as
+``local_csc_p{i}.npz`` next to the manifest — artifact format v3), a
+fan-out sampler draws fixed-shape k-hop ego networks that stay
+partition-local and cross into halo-owned neighbors only when the
+frontier demands it (``neighbor``), and a degree-ordered hot-vertex
+feature cache serves remote-partition features without a halo exchange
+on a hit (``feature_cache``).  ``launch/serve.py``'s ``serve_gnn`` wires
+the three into a request loop with cache-hit and latency reporting.
+
+Everything is instrumented through ``repro.obs`` (``sample.*`` counters,
+per-minibatch spans) and the cache NEVER changes values — only latency
+and metrics — so a cached serve path returns bit-identical logits to an
+uncached one.
+"""
+from .feature_cache import HotVertexFeatureCache
+from .local_graph import (LocalGraph, PartitionedGraph, build_adjacency,
+                          build_local_graphs, load_local_graph)
+from .neighbor import PartitionedNeighborSampler, minibatch_halo_plan
+
+__all__ = [
+    "HotVertexFeatureCache", "LocalGraph", "PartitionedGraph",
+    "PartitionedNeighborSampler", "build_adjacency", "build_local_graphs",
+    "load_local_graph", "minibatch_halo_plan",
+]

@@ -41,9 +41,40 @@ def test_train_cli_resumes_from_checkpoint(tmp_path):
 
 def test_serve_cli_lm():
     r = _run(["repro.launch.serve", "--arch", "starcoder2-3b",
-              "--requests", "2", "--max-new", "4"])
+              "--requests", "2", "--max-new", "4", "--json"])
     assert r.returncode == 0, r.stderr[-2000:]
     assert "generated" in r.stdout
+    assert "compile excluded" in r.stdout
+    rep = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rep["mode"] == "lm" and rep["tokens_per_s"] > 0
+    assert rep["generated_tokens"] == 2 * 4
+
+
+def test_serve_cli_gnn_artifact(tmp_path):
+    """partition --local-graphs -> serve --gnn-artifact --json end to
+    end: the serving pipeline runs off the artifact alone."""
+    from repro.data import rmat_graph
+    edges = rmat_graph(8, edge_factor=8, seed=13)
+    path = str(tmp_path / "g.bin")
+    np.ascontiguousarray(edges, dtype=np.uint32).tofile(path)
+    art_dir = str(tmp_path / "artifact")
+    r = _run(["repro.launch.partition", "--input", path, "--k", "4",
+              "--algorithm", "2psl", "--chunk-size", "1024",
+              "--artifact-dir", art_dir, "--local-graphs", "--json"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert json.loads(r.stdout)["local_graphs"] == 4
+    assert os.path.exists(os.path.join(art_dir, "local_csc_p0.npz"))
+
+    r2 = _run(["repro.launch.serve", "--gnn-artifact", art_dir,
+               "--requests", "6", "--roots-per", "3", "--json"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    rep = json.loads(r2.stdout.strip().splitlines()[-1])
+    assert rep["mode"] == "gnn" and rep["k"] == 4
+    assert rep["requests"] == 6
+    assert rep["p99_ms"] >= rep["p50_ms"] > 0
+    assert 0.0 <= rep["cache"]["hit_rate"] <= 1.0
+    assert rep["cache"]["hits"] + rep["cache"]["misses"] \
+        + rep["remote_rows_fetched"] > 0
 
 
 def test_partition_cli_roundtrip(tmp_path):

@@ -1,0 +1,451 @@
+"""`repro.sample` — partition-aware sampling + serving pipeline.
+
+Covers the serving subsystem's contracts end to end: out-of-core local
+CSC/CSR structure consistent with the halo plan (artifact format v3, v2
+loads unchanged), full-fan-out sampled forwards bit-consistent with the
+dense reference models, property-level sampling invariants (every edge
+exists in the source graph; halo crossings stay inside the replica
+sets), and the hot-vertex feature cache never changing values — only
+latency and metrics.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import InMemoryEdgeStream, PartitionArtifact, run_spec, \
+    spec_for
+from repro.sample import (HotVertexFeatureCache, LocalGraph,
+                          PartitionedGraph, PartitionedNeighborSampler,
+                          build_adjacency, build_local_graphs,
+                          load_local_graph, minibatch_halo_plan)
+
+from conftest import random_graph
+
+
+def _graph(seed, V=120, E=700):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, V, size=(E, 2), dtype=np.int64), V
+
+
+def _artifact(tmp_path, edges, V, k, algorithm="2psl", name="art",
+              chunk_size=256, build=True, **bl_kw):
+    stream = InMemoryEdgeStream(edges, num_vertices=V)
+    res = run_spec(spec_for(algorithm, chunk_size=chunk_size), stream, k)
+    d = str(tmp_path / name)
+    art = PartitionArtifact.save(d, res, num_vertices=V,
+                                 num_edges=len(edges), edges=edges)
+    if build:
+        build_local_graphs(art, edges=edges, **bl_kw)
+    return art
+
+
+# ---------------------------------------------------------------------------
+# unified CSR/CSC builder
+# ---------------------------------------------------------------------------
+
+def test_build_adjacency_empty_and_float_dtype():
+    indptr, order = build_adjacency(np.empty((0, 2)), 5, by="src")
+    assert indptr.tolist() == [0] * 6 and len(order) == 0
+    indptr, order = build_adjacency(np.empty((0, 2), np.float64), 0)
+    assert indptr.tolist() == [0]
+
+
+def test_build_adjacency_trailing_isolated_vertices():
+    edges = np.array([[0, 1], [1, 2], [0, 2]])
+    for by, col in (("src", 0), ("dst", 1)):
+        indptr, order = build_adjacency(edges, 7, by=by)
+        assert len(indptr) == 8
+        assert indptr[-1] == 3 == indptr[3]       # 3..6 isolated
+        # stable grouping: order reconstructs a sort by the chosen column
+        assert (np.diff(edges[order, col]) >= 0).all()
+
+
+def test_build_adjacency_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        build_adjacency(np.array([[0, 9]]), 4, by="dst")
+
+
+def test_csrgraph_shim_delegates_and_handles_edge_cases():
+    from repro.data.sampler import CSRGraph, NeighborSampler
+    g = CSRGraph.from_edges(np.empty((0, 2)), 4)          # used to raise
+    s = NeighborSampler(g, (3,), seed=0)
+    out = s.sample(np.array([0, 3]))
+    assert out["edge_mask"].sum() == 0
+    g2 = CSRGraph.from_edges(np.array([[0, 1]]), 5)       # 4 is isolated
+    out2 = NeighborSampler(g2, (2,), seed=0).sample(np.array([4, 0]))
+    assert out2["edge_mask"].tolist() == [0.0, 0.0, 1.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# local graph structure (out-of-core build, artifact v3)
+# ---------------------------------------------------------------------------
+
+def test_local_graph_roundtrip(tmp_path):
+    edges, V = _graph(0)
+    eid = np.arange(len(edges), dtype=np.int64)
+    g = LocalGraph.from_edges(3, edges, eid)
+    path = g.save(str(tmp_path))
+    g2 = LocalGraph.load(path)
+    assert g2.part_id == 3
+    for name in ("vmap_global", "csc_indptr", "csc_src", "csc_eid",
+                 "csr_indptr", "csr_dst", "csr_eid"):
+        np.testing.assert_array_equal(getattr(g, name), getattr(g2, name))
+    # local ids are positions in the sorted global vertex set
+    assert (np.diff(g.vmap_global) > 0).all()
+    np.testing.assert_array_equal(
+        g.local_of(g.vmap_global), np.arange(g.num_local))
+    assert g.local_of(np.array([V + 5]))[0] == -1
+
+
+def test_build_local_graphs_chunking_invariant(tmp_path):
+    """The out-of-core sweep is chunk-size independent: any chunking
+    yields byte-identical local structure."""
+    edges, V = _graph(1)
+    # build twice with very different sweep chunk sizes
+    art1 = _artifact(tmp_path, edges, V, 4, name="c1", chunk_size=128,
+                     build=False)
+    build_local_graphs(art1, edges=edges, chunk_size=37)
+    art2dir = str(tmp_path / "c2")
+    import shutil
+    shutil.copytree(art1.path, art2dir)
+    art2 = PartitionArtifact.load(art2dir)
+    build_local_graphs(art2, edges=edges, chunk_size=100000)
+    for p in range(4):
+        g1, g2 = art1.local_graph(p), art2.local_graph(p)
+        for name in ("vmap_global", "csc_indptr", "csc_src", "csc_eid",
+                     "csr_indptr", "csr_dst", "csr_eid"):
+            np.testing.assert_array_equal(getattr(g1, name),
+                                          getattr(g2, name))
+
+
+def test_artifact_v3_and_v2_compat(tmp_path):
+    edges, V = _graph(2)
+    art = _artifact(tmp_path, edges, V, 4, build=False)
+    assert not art.has_local_graphs()
+    with pytest.raises(FileNotFoundError):
+        art.local_graph(0)
+    graphs = build_local_graphs(art, edges=edges)
+    assert len(graphs) == 4
+
+    art2 = PartitionArtifact.load(art.path)
+    assert art2.manifest["format_version"] == 3
+    assert art2.has_local_graphs()
+    g0 = art2.local_graph(0)
+    assert g0.num_edges == int((np.asarray(art2.assignment) == 0).sum())
+    assert load_local_graph(art2.path, 1).part_id == 1
+
+    # a v2 manifest (no local_graphs block) still loads and reports no
+    # local structure — v2 readers of v3 manifests only gained a key
+    man = dict(art2.manifest)
+    man.pop("local_graphs")
+    man["format_version"] = 2
+    v2dir = str(tmp_path / "v2")
+    os.makedirs(v2dir)
+    np.asarray(art2.assignment).tofile(os.path.join(v2dir,
+                                                    "assignment.bin"))
+    with open(os.path.join(v2dir, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    old = PartitionArtifact.load(v2dir)
+    assert not old.has_local_graphs()
+    np.testing.assert_array_equal(np.asarray(old.assignment),
+                                  np.asarray(art2.assignment))
+
+
+def test_local_ids_match_halo_plan(tmp_path):
+    """The id maps agree with the halo plan: partition p's local ids are
+    positions in the plan's sorted vmap_global[p] valid prefix."""
+    edges, V = _graph(3)
+    art = _artifact(tmp_path, edges, V, 4)
+    plan = art.halo_plan()
+    for p in range(4):
+        g = art.local_graph(p)
+        pv = plan.vmap_global[p]
+        np.testing.assert_array_equal(g.vmap_global, pv[pv >= 0])
+
+
+def test_partitioned_graph_replicas_and_degrees(tmp_path):
+    edges, V = _graph(4)
+    art = _artifact(tmp_path, edges, V, 4)
+    pg = PartitionedGraph.load(art)
+    assert pg.degrees().sum() == len(edges)
+    # global in-degree folds correctly across partitions
+    np.testing.assert_array_equal(
+        pg.degrees(), np.bincount(edges[:, 1], minlength=V))
+    # home = lowest replica partition; masters partition the vertex set
+    asg = np.asarray(art.assignment)
+    for v in np.unique(edges)[:20]:
+        parts = np.unique(asg[(edges[:, 0] == v) | (edges[:, 1] == v)])
+        assert pg.home_of(np.array([v]))[0] == parts.min()
+    masters = np.concatenate([pg.masters(p) for p in range(4)])
+    np.testing.assert_array_equal(np.sort(masters), np.unique(edges))
+
+
+# ---------------------------------------------------------------------------
+# sampling: parity with dense references
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,k", [("2psl", 2), ("2psl", 4),
+                                         ("dbh", 2), ("dbh", 4)])
+def test_full_fanout_egnn_bit_parity(tmp_path, algorithm, k):
+    """Full-fan-out sampled forward == dense reference, bit for bit
+    (EGNN: the dense model with no batch statistics), across specs and
+    partition counts."""
+    import jax
+    from repro.models.gnn import EGNNConfig, egnn_apply, egnn_init
+    edges, V = _graph(10 + k)
+    rng = np.random.default_rng(5)
+    feats = rng.normal(size=(V, 6)).astype(np.float32)
+    coords = rng.normal(size=(V, 3)).astype(np.float32)
+    art = _artifact(tmp_path, edges, V, k, algorithm=algorithm)
+    pg = PartitionedGraph.load(art)
+
+    L_hops = 2
+    cfg = EGNNConfig(name="egnn", n_layers=L_hops, d_hidden=16, d_in=6,
+                     n_classes=3)
+    params = egnn_init(cfg, jax.random.key(0))
+    dense = np.asarray(egnn_apply(cfg, params, {
+        "nodes": feats, "edges": edges.astype(np.int32),
+        "edge_attr": None, "node_mask": np.ones(V, np.float32),
+        "edge_mask": np.ones(len(edges), np.float32),
+        "graph_ids": np.zeros(V, np.int32), "coords": coords,
+    })["node_logits"])
+
+    sampler = PartitionedNeighborSampler(pg, [-1] * L_hops)
+    roots = rng.choice(V, size=5, replace=False)
+    b = sampler.padded_batch(roots, feats, max_nodes=V + 8,
+                             max_edges=len(edges) + 8, coords=coords)
+    out = np.asarray(egnn_apply(cfg, params, b)["node_logits"])
+    np.testing.assert_array_equal(out[b["root_local"]], dense[roots])
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_full_fanout_gin_loss_parity(tmp_path, k):
+    """Sampled-subgraph root loss == dense reference loss on the same
+    roots (no-BN GIN, the repo's dist-parity reference)."""
+    import jax
+    import jax.numpy as jnp
+    import repro.models.layers as L
+    from repro.launch import steps as S
+    from repro.models.gnn import GINConfig
+    edges, V = _graph(20 + k)
+    rng = np.random.default_rng(6)
+    feats = rng.normal(size=(V, 5)).astype(np.float32)
+    labels = rng.integers(0, 3, size=V).astype(np.int32)
+    art = _artifact(tmp_path, edges, V, k)
+    pg = PartitionedGraph.load(art)
+
+    cfg = GINConfig(name="gin", n_layers=2, d_hidden=16, d_in=5,
+                    n_classes=3)
+    params = S.gnn_init(cfg, jax.random.key(0))
+
+    def forward(nodes, eg, emask, N):
+        src, dst = eg[:, 0], eg[:, 1]
+        h = L.dense(params["encoder"], jnp.asarray(nodes))
+        for lp in params["layers"]:
+            agg = jax.ops.segment_sum(h[src] * emask[:, None],
+                                      jnp.asarray(dst), num_segments=N)
+            pre = (1.0 + lp["eps"]) * h + agg
+            h = L.dense(lp["mlp"]["l2"],
+                        jax.nn.relu(L.dense(lp["mlp"]["l1"], pre)))
+            h = jax.nn.relu(h)
+        return L.dense(params["head"], h).astype(jnp.float32)
+
+    def root_loss(logits, labs):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, jnp.asarray(labs)[:, None],
+                                 axis=-1)[:, 0]
+        return -ll.mean()
+
+    dense = forward(feats, edges.astype(np.int32),
+                    np.ones(len(edges), np.float32), V)
+    roots = rng.choice(V, size=6, replace=False)
+    ref = float(root_loss(dense[roots], labels[roots]))
+
+    sampler = PartitionedNeighborSampler(pg, [-1, -1])
+    b = sampler.padded_batch(roots, feats, labels, max_nodes=V + 8,
+                             max_edges=len(edges) + 8)
+    logits = forward(b["nodes"], b["edges"], b["edge_mask"],
+                     b["nodes"].shape[0])
+    got = float(root_loss(logits[b["root_local"]],
+                          b["labels"][b["root_local"]]))
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# sampling: property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4]),
+       st.sampled_from([(-1, -1), (3,), (2, 2), (-1,)]))
+def test_sampled_edges_exist_and_halo_crossings_are_replicas(
+        tmp_path_factory, seed, k, fanouts):
+    """Every sampled edge is a source-graph edge (by global edge id), and
+    every halo-crossed read names a partition that really holds a replica
+    of the destination — the halo plan's replica sets."""
+    rng = np.random.default_rng(seed)
+    edges = random_graph(rng, max_v=48, max_e=200).astype(np.int64)
+    if len(edges) == 0:
+        return
+    V = int(edges.max()) + 1
+    tmp = tmp_path_factory.mktemp(f"prop{seed % 1000}")
+    art = _artifact(tmp, edges, V, k, chunk_size=64)
+    pg = PartitionedGraph.load(art)
+    asg = np.asarray(art.assignment)
+
+    sampler = PartitionedNeighborSampler(pg, fanouts, seed=seed % 97)
+    roots = rng.integers(0, V, size=min(4, V))
+    out = sampler.sample(roots)
+    valid = out["edge_mask"] > 0
+    eid = out["edge_eid"][valid]
+    src_g = out["node_ids"][out["edges"][valid, 0]]
+    dst_g = out["node_ids"][out["edges"][valid, 1]]
+    # (1) every sampled edge exists in the source graph
+    np.testing.assert_array_equal(edges[eid, 0], src_g)
+    np.testing.assert_array_equal(edges[eid, 1], dst_g)
+    # (2) the partition each edge was read from is the partition the
+    # engine assigned that edge to...
+    part = out["edge_part"][valid]
+    np.testing.assert_array_equal(part, asg[eid])
+    # ...and holds a replica of the destination per the halo plan
+    plan = art.halo_plan()
+    for p in np.unique(part):
+        pv = plan.vmap_global[p]
+        assert np.isin(dst_g[part == p], pv[pv >= 0]).all()
+    # stats partition the valid edges
+    assert out["stats"]["local_edges"] + out["stats"]["halo_edges"] \
+        == int(valid.sum())
+
+
+def test_fixed_fanout_slots_and_padded_batch_shapes(tmp_path):
+    """Fanout f gives every frontier vertex exactly f slots (masked where
+    degree is zero); padded_batch pads to static caps so the serving
+    forward compiles once."""
+    edges, V = _graph(30)
+    art = _artifact(tmp_path, edges, V, 4)
+    pg = PartitionedGraph.load(art)
+    sampler = PartitionedNeighborSampler(pg, (3, 2), seed=0)
+    roots = np.array([7, 7, 11, 40, 2])          # dup root dedups
+    out = sampler.sample(roots)
+    n_front = len(np.unique(roots))
+    hop1 = out["edge_eid"][:n_front * 3]
+    assert len(hop1) == n_front * 3
+    deg = np.bincount(edges[:, 1], minlength=V)
+    for i, v in enumerate(np.unique(roots)):
+        slots = hop1[i * 3:(i + 1) * 3]
+        assert (slots >= 0).all() if deg[v] > 0 else (slots == -1).all()
+
+    feats = np.zeros((V, 4), np.float32)
+    shapes = set()
+    for r in range(3):
+        b = sampler.padded_batch(np.arange(5) + r, feats,
+                                 max_nodes=64, max_edges=128)
+        shapes.add((b["nodes"].shape, b["edges"].shape))
+    assert shapes == {((64, 4), (128, 2))}
+
+
+def test_minibatch_halo_plan_covers_sample(tmp_path):
+    edges, V = _graph(31)
+    art = _artifact(tmp_path, edges, V, 4)
+    pg = PartitionedGraph.load(art)
+    out = PartitionedNeighborSampler(pg, (4, 4), seed=1).sample(
+        np.arange(6))
+    plan = minibatch_halo_plan(out, 4)
+    assert plan.k == 4
+    assert plan.v_cap >= 1
+    # every subgraph vertex with a valid edge appears in some partition's
+    # vertex map
+    valid = out["edge_mask"] > 0
+    touched = np.unique(out["edges"][valid])
+    covered = np.unique(plan.vmap_global[plan.vmap_global >= 0])
+    assert np.isin(touched, covered).all()
+
+
+# ---------------------------------------------------------------------------
+# feature cache
+# ---------------------------------------------------------------------------
+
+def test_cache_values_bit_identical_and_counters():
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(64, 4)).astype(np.float32)
+    fetches = []
+
+    def fetch(g):
+        fetches.append(np.array(g))
+        return feats[g]
+
+    deg = rng.integers(0, 100, size=64)
+    cache = HotVertexFeatureCache(fetch, 4, byte_budget=16 * 4 * 4,
+                                  degrees=deg, static_fraction=0.5)
+    assert cache.static_size == 8 and cache.lru_capacity == 8
+    ids = rng.integers(0, 64, size=300)
+    got = cache.get(ids)
+    np.testing.assert_array_equal(got, feats[ids])      # bit-identical
+    st_ = cache.stats()
+    assert st_["hits"] > 0 and st_["misses"] > 0
+    assert st_["hits"] + st_["misses"] == 300
+    assert 0.0 < st_["hit_rate"] < 1.0
+    assert st_["byte_budget_used"] <= 16 * 4 * 4
+
+    # static tier: top-degree ids are pinned and never fetched again
+    hot = np.argsort(deg)[::-1][:8]
+    fetches.clear()
+    cache.get(np.sort(hot))
+    assert not fetches, "static-tier read must not hit the fetch path"
+
+
+def test_cache_eviction_lru_order():
+    feats = np.arange(40, dtype=np.float32).reshape(10, 4)
+    cache = HotVertexFeatureCache(lambda g: feats[g], 4,
+                                  byte_budget=2 * 4 * 4)   # 2 rows, no static
+    cache.get(np.array([0]))
+    cache.get(np.array([1]))
+    cache.get(np.array([0]))          # refresh 0 -> LRU victim is 1
+    cache.get(np.array([2]))          # evicts 1
+    assert cache.evictions == 1
+    assert 0 in cache and 2 in cache and 1 not in cache
+    assert cache.stats()["lru_rows"] == 2
+
+
+def test_cache_zero_budget_passthrough():
+    feats = np.eye(4, dtype=np.float32)
+    cache = HotVertexFeatureCache(lambda g: feats[g], 4, byte_budget=0)
+    got = cache.get(np.array([1, 2, 1]))
+    np.testing.assert_array_equal(got, feats[[1, 2, 1]])
+    assert cache.hits == 0 and cache.misses == 3 and cache.evictions == 0
+
+
+def test_cache_metrics_land_in_registry():
+    from repro import obs
+    reg = obs.MetricsRegistry()
+    feats = np.ones((8, 2), np.float32)
+    with obs.use_registry(reg):
+        cache = HotVertexFeatureCache(lambda g: feats[g], 2,
+                                      byte_budget=8 * 2 * 4)
+        cache.get(np.array([0, 1]))
+        cache.get(np.array([0, 1]))
+    snap = reg.snapshot()
+    assert snap["sample.cache.hits"]["value"] == 2
+    assert snap["sample.cache.misses"]["value"] == 2
+
+
+# ---------------------------------------------------------------------------
+# serving path: cache only changes latency/metrics, never logits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,k", [("2psl", 2), ("dbh", 4)])
+def test_serve_gnn_cached_logits_identical(tmp_path, algorithm, k):
+    from repro.launch.serve import serve_gnn
+    edges, V = _graph(40 + k, V=90, E=500)
+    art = _artifact(tmp_path, edges, V, k, algorithm=algorithm)
+    cached, rep = serve_gnn(art.path, n_requests=6, roots_per=3,
+                            cache_budget=1 << 12, seed=3)
+    uncached, rep2 = serve_gnn(art.path, n_requests=6, roots_per=3,
+                               no_cache=True, seed=3)
+    np.testing.assert_array_equal(cached, uncached)
+    assert rep["cache"]["hits"] + rep["cache"]["misses"] > 0
+    assert rep["p50_ms"] > 0 and rep["p99_ms"] >= rep["p50_ms"]
+    assert rep2["cache"]["hit_rate"] == 0.0
