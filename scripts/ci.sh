@@ -120,7 +120,8 @@ import numpy as np
 from repro.core import PartitionArtifact
 from repro.sample import PartitionedGraph, PartitionedNeighborSampler
 art = PartitionArtifact.load(sys.argv[1] + "/artifact_serve")
-assert art.manifest["format_version"] == 3 and art.has_local_graphs()
+assert art.manifest["format_version"] == 4 and art.has_local_graphs()
+assert art.manifest["integrity"]["files"], "v4 artifact must be checksummed"
 pg = PartitionedGraph.load(art)
 out = PartitionedNeighborSampler(pg, (-1, -1)).sample(np.arange(4))
 assert out["edge_mask"].sum() > 0
@@ -130,6 +131,52 @@ assert rep["mode"] == "gnn" and rep["p99_ms"] >= rep["p50_ms"] > 0
 assert rep["cache"]["hit_rate"] > 0, rep["cache"]
 print(f"serve smoke OK: p50 {rep['p50_ms']}ms p99 {rep['p99_ms']}ms "
       f"cache hit-rate {rep['cache']['hit_rate']}")
+PY
+
+# ---- crash-resume smoke stage: hard-kill a checkpointed partition run
+# after its 2nd checkpoint (REPRO_CRASH_AFTER_CHECKPOINTS -> os._exit, no
+# atexit/flush), then --resume it — the recovered assignment must be
+# byte-identical to an uninterrupted run and the manifest must record the
+# resume (docs/robustness.md) --------------------------------------------
+if REPRO_CRASH_AFTER_CHECKPOINTS=2 python -m repro.launch.partition \
+    --input "$smoke_dir/graph.bin" --k 4 --algorithm 2psl \
+    --chunk-size 128 --artifact-dir "$smoke_dir/artifact_crash" \
+    --checkpoint-every 2 --no-plan --json > /dev/null
+then echo "crash stage: run survived the kill"; exit 1; else rc=$?; fi
+[[ "$rc" == 137 ]] || { echo "crash stage: expected exit 137, got $rc"; exit 1; }
+[[ ! -f "$smoke_dir/artifact_crash/manifest.json" ]] \
+    || { echo "crash stage: killed run left a manifest"; exit 1; }
+python -m repro.launch.partition \
+    --input "$smoke_dir/graph.bin" --k 4 --algorithm 2psl \
+    --chunk-size 128 --artifact-dir "$smoke_dir/artifact_crash" \
+    --checkpoint-every 2 --resume --no-plan --json \
+    > "$smoke_dir/resume.json"
+python - "$smoke_dir" <<'PY'
+import hashlib, json, sys
+rep = json.load(open(sys.argv[1] + "/resume.json"))
+assert rep["resumes"] >= 1, rep
+manifest = json.load(open(sys.argv[1] + "/artifact_crash/manifest.json"))
+assert manifest["extras"]["resumes"] >= 1
+sha = lambda p: hashlib.sha256(open(p, "rb").read()).hexdigest()
+resumed = sha(sys.argv[1] + "/artifact_crash/assignment.bin")
+clean = sha(sys.argv[1] + "/artifact/assignment.bin")
+print(f"crash-resume smoke OK: resumed assignment sha256 {resumed[:12]}.. "
+      f"(resumes={manifest['extras']['resumes']})")
+PY
+python - "$smoke_dir" <<'PY'
+# byte-identity vs a clean run at the same spec/chunking
+import hashlib, subprocess, sys, os
+d = sys.argv[1]
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.partition", "--input",
+     d + "/graph.bin", "--k", "4", "--algorithm", "2psl", "--chunk-size",
+     "128", "--artifact-dir", d + "/artifact_clean128", "--no-plan",
+     "--json"], check=True, stdout=subprocess.DEVNULL)
+sha = lambda p: hashlib.sha256(open(p, "rb").read()).hexdigest()
+a = sha(d + "/artifact_crash/assignment.bin")
+b = sha(d + "/artifact_clean128/assignment.bin")
+assert a == b, f"resumed {a[:12]} != clean {b[:12]}"
+print("crash-resume byte-identity OK")
 PY
 
 # ---- docs stage: README.md + docs/*.md must exist and their '# doc-test'

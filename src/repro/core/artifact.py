@@ -25,8 +25,13 @@ to a fresh ``plan_halo_exchange`` without touching the edge stream.
 Format history: v1 (PR 2) had no host plan; v2 adds the optional
 ``host_plan`` manifest block + ``.npz``; v3 adds the optional
 ``local_graphs`` block pointing at per-partition ``local_csc_p{i}.npz``
-serving structure (``repro.sample.local_graph``).  v1/v2 artifacts still
-load unchanged.
+serving structure (``repro.sample.local_graph``); v4 (PR 8) adds the
+``integrity`` block — sha256 content checksums for every sidecar file,
+verified by default on ``load`` — and makes ``save`` atomic end-to-end
+(every file staged ``*.tmp`` + ``os.replace``, manifest written last, so
+a crash mid-save leaves either the previous complete artifact or an
+unloadable directory, never a loadable-but-wrong mix).  v1–v3 artifacts
+still load unchanged (no checksums to verify).
 """
 from __future__ import annotations
 
@@ -37,6 +42,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..robust.integrity import (atomic_path, checksum_files,
+                                save_json_atomic, savez_atomic,
+                                verify_checksums)
 from .engine import PartitionRunResult
 from .specs import PartitionerSpec, spec_from_dict
 
@@ -44,8 +52,8 @@ ASSIGNMENT_FILE = "assignment.bin"
 MANIFEST_FILE = "manifest.json"
 HALO_PLAN_FILE = "halo_plan.npz"
 HOST_PLAN_FILE = "host_plan.npz"
-FORMAT_VERSION = 3
-SUPPORTED_VERSIONS = (1, 2, 3)
+FORMAT_VERSION = 4
+SUPPORTED_VERSIONS = (1, 2, 3, 4)
 
 #: HaloPlan fields that are plain ints/floats (stored as 0-d npz entries).
 _PLAN_SCALARS = ("k", "v_cap", "e_cap", "b_cap", "o_cap",
@@ -170,14 +178,20 @@ class PartitionArtifact:
 
         Called by ``repro.sample.build_local_graphs`` after the per-
         partition ``.npz`` files land next to the manifest; bumps the
-        on-disk format to v3 (older artifacts upgrade in place — v3
-        readers treat an absent block exactly like a v2 artifact)."""
+        on-disk format to at least v3 (older artifacts upgrade in place —
+        newer readers treat an absent block exactly like a v2 artifact).
+        Artifacts that carry an ``integrity`` block get checksums for the
+        new per-partition files, and the manifest rewrite is atomic."""
         self.manifest["local_graphs"] = meta
         self.manifest["format_version"] = max(
             int(self.manifest.get("format_version") or 1), 3)
+        integrity = self.manifest.get("integrity")
+        if integrity is not None:
+            integrity["files"].update(
+                checksum_files(self.path, meta.get("files", [])))
         self._local_graphs = None
-        with open(os.path.join(self.path, MANIFEST_FILE), "w") as f:
-            json.dump(self.manifest, f, indent=2)
+        save_json_atomic(os.path.join(self.path, MANIFEST_FILE),
+                         self.manifest)
 
     # -- persistence -----------------------------------------------------
     @classmethod
@@ -210,7 +224,8 @@ class PartitionArtifact:
                 os.path.realpath(asg_path)):
             asg.flush()                    # engine already wrote in place
         else:
-            np.asarray(asg, dtype=np.int32).tofile(asg_path)
+            with atomic_path(asg_path) as tmp:
+                np.asarray(asg, dtype=np.int32).tofile(tmp)
 
         if plan is None and stream is not None:
             from repro.dist.partitioned_gnn import plan_halo_exchange_stream
@@ -261,7 +276,7 @@ class PartitionArtifact:
         if plan is not None:
             arrays = {f.name: getattr(plan, f.name)
                       for f in dataclasses.fields(plan)}
-            np.savez(os.path.join(path, HALO_PLAN_FILE), **arrays)
+            savez_atomic(os.path.join(path, HALO_PLAN_FILE), **arrays)
             manifest["halo_plan"] = {
                 "path": HALO_PLAN_FILE,
                 "pair_cap_quantile": pair_cap_quantile,
@@ -270,18 +285,35 @@ class PartitionArtifact:
         if host_plan is not None:
             arrays = {name: getattr(host_plan, name)
                       for name in _HOST_ARRAYS + _HOST_SCALARS}
-            np.savez(os.path.join(path, HOST_PLAN_FILE), **arrays)
+            savez_atomic(os.path.join(path, HOST_PLAN_FILE), **arrays)
             manifest["host_plan"] = {"path": HOST_PLAN_FILE,
                                      **host_plan.dcn_summary()}
-        with open(os.path.join(path, MANIFEST_FILE), "w") as f:
-            json.dump(manifest, f, indent=2)
+        # content checksums over every sidecar; the manifest itself lands
+        # last, so a crash anywhere above leaves no v4 manifest pointing
+        # at missing/stale files — and a stale-manifest/new-files mix is
+        # caught by verification at load time
+        sidecars = [ASSIGNMENT_FILE]
+        if manifest["halo_plan"] is not None:
+            sidecars.append(HALO_PLAN_FILE)
+        if manifest["host_plan"] is not None:
+            sidecars.append(HOST_PLAN_FILE)
+        manifest["integrity"] = {"algorithm": "sha256",
+                                 "files": checksum_files(path, sidecars)}
+        save_json_atomic(os.path.join(path, MANIFEST_FILE), manifest)
         return cls(path=path, manifest=manifest, _assignment=None,
                    _plan=plan, _host_plan=host_plan)
 
     @classmethod
-    def load(cls, path: str) -> "PartitionArtifact":
+    def load(cls, path: str, *, verify: bool = True) -> "PartitionArtifact":
         """Open a persisted artifact (lazy: the assignment memmaps on
         first access, plans rebuild from their ``.npz`` on first call).
+
+        ``verify`` (default on) checks every file named in the manifest's
+        ``integrity`` block against its recorded sha256 — a corrupted,
+        truncated, or mixed-generation artifact raises
+        ``repro.robust.ArtifactIntegrityError`` here instead of producing
+        silently wrong plans downstream.  Pre-v4 artifacts carry no
+        checksums and skip verification.
 
         Example::
 
@@ -297,4 +329,8 @@ class PartitionArtifact:
             raise ValueError(f"{path}: unsupported artifact format "
                              f"{version!r} (want one of "
                              f"{SUPPORTED_VERSIONS})")
+        integrity = manifest.get("integrity")
+        if verify and integrity is not None:
+            verify_checksums(path, integrity["files"],
+                             label="partition artifact")
         return cls(path=path, manifest=manifest)

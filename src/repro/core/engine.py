@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -139,9 +140,15 @@ class _Timer:
         self.t[name] = self.t.get(name, 0.0) + seconds
 
 
-def _alloc_assignment(num_edges: int, out_path: str | None):
+def _alloc_assignment(num_edges: int, out_path: str | None,
+                      resume: bool = False):
     if out_path is None:
         return np.full(num_edges, -1, np.int32)
+    if resume and os.path.exists(out_path):
+        # a resumed run re-opens the partial assignment in place; every
+        # row at or beyond the checkpointed cursor is rewritten by replay
+        return np.memmap(out_path, dtype=np.int32, mode="r+",
+                         shape=(num_edges,))
     mm = np.memmap(out_path, dtype=np.int32, mode="w+", shape=(num_edges,))
     mm[:] = -1
     return mm
@@ -224,6 +231,32 @@ class StreamingPartitioner:
         """-> (bits, sizes, extras)."""
         return state["bits"], state["sizes"], {}
 
+    # -- checkpoint / resume protocol (repro.robust) ---------------------
+    # The engine checkpoints the device-state dict generically; these three
+    # hooks cover what lives OUTSIDE it: host-folded arrays (bit matrices,
+    # hash-family sizes) and the metadata init_state derived from its
+    # prologue sweeps (clustering tables, degrees).  A resumed run calls
+    # ``init_for_resume`` (cheap scalar setup — no stream sweeps) followed
+    # by ``restore_host_state``; the device state is then restored from
+    # the checkpoint wholesale, so bit-identity never depends on
+    # re-running the prologue.
+
+    def host_state(self) -> dict:
+        """Host-side arrays the engine must checkpoint beyond the device
+        state pytree (default: none)."""
+        return {}
+
+    def restore_host_state(self, arrays: dict) -> None:
+        pass
+
+    def init_for_resume(self, stream: EdgeStream, k: int,
+                        timer: _Timer) -> None:
+        """Set up scalar attributes without the streaming prologue.  The
+        fallback re-runs ``init_state`` (deterministic, so still
+        bit-identical — just not free); partitioners with stream-sweeping
+        prologues override to skip them."""
+        self.init_state(stream, k, timer, None)
+
 
 # ---------------------------------------------------------------------------
 # 2PS-L / 2PS-HDRF
@@ -284,6 +317,38 @@ class _TwoPSLPartitioner(StreamingPartitioner):
                            host_fold=self._fold_bits_host),
                 StreamPass("scoring", self._score, merge=True,
                            setup=self._upload_bits)]
+
+    def host_state(self):
+        # the clustering/mapping tables init_state derives from its two
+        # prologue sweeps ride along so resume never re-streams the graph
+        d = {"bits": self._bits_np,
+             "clus_v2c": self._clus.v2c, "clus_vol": self._clus.vol,
+             "clus_degrees": self._clus.degrees,
+             "clus_max_vol": np.asarray(self._clus.max_vol),
+             "part_vol": np.asarray(self._part_vol)}
+        if self._track_hbits:
+            d["hbits"] = self._hbits_np
+        return d
+
+    def restore_host_state(self, arrays):
+        from .clustering import ClusteringResult
+        self._bits_np = np.ascontiguousarray(arrays["bits"])
+        if self._track_hbits:
+            self._hbits_np = np.ascontiguousarray(arrays["hbits"])
+        self._clus = ClusteringResult(
+            v2c=arrays["clus_v2c"], vol=arrays["clus_vol"],
+            degrees=arrays["clus_degrees"],
+            max_vol=int(arrays["clus_max_vol"]))
+        self._part_vol = arrays["part_vol"]
+
+    def init_for_resume(self, stream, k, timer):
+        sp = self.spec
+        self.k, self.cap = k, capacity(stream.num_edges, k, sp.alpha)
+        self._num_edges = stream.num_edges
+        self._init_hierarchy(k)
+        self._track_hbits = self.hosted and sp.scoring == "2psl"
+        if self.num_hosts:
+            self._host_of_np = host_assignment(k, self.num_hosts)
 
     def _prepartition(self, st, pc):
         sizes, asg, _ = P._prepartition_core(
@@ -377,6 +442,13 @@ class _HDRFPartitioner(StreamingPartitioner):
             dcn_penalty=sp.dcn_penalty if self.hosted else 0.0)
         return {"bits": bits, "sizes": sizes, "dpart": dpart}, asg
 
+    def init_for_resume(self, stream, k, timer):
+        # everything HDRF carries lives in the device state — skip the
+        # O(|V|*k) bit-matrix allocation init_state would throw away
+        self.k = k
+        self.cap = capacity(stream.num_edges, k, self.spec.alpha)
+        self._init_hierarchy(k)
+
 
 # ---------------------------------------------------------------------------
 # stateless hashing family (DBH / Grid / Random)
@@ -418,6 +490,19 @@ class _HashPartitioner(StreamingPartitioner):
     def finalize(self, state, pass_counts):
         return self._bits_np, self._sizes_np, {}
 
+    def host_state(self):
+        return {"bits": self._bits_np, "sizes": self._sizes_np}
+
+    def restore_host_state(self, arrays):
+        self._bits_np = np.ascontiguousarray(arrays["bits"])
+        self._sizes_np = np.ascontiguousarray(arrays["sizes"])
+
+    def init_for_resume(self, stream, k, timer):
+        # DBH's degrees live in the device state ("d"), so even it skips
+        # its prologue sweep here
+        self.k = k
+        self._init_hierarchy(k)
+
 
 class _DBHPartitioner(_HashPartitioner):
     def __init__(self, spec: DBHSpec):
@@ -454,6 +539,13 @@ class _GridPartitioner(_HashPartitioner):
         return P._grid_chunk(pc.edges, pc.valid, k=self.k, rows=self.rows,
                              cols=self.cols)
 
+    def init_for_resume(self, stream, k, timer):
+        rows = int(math.isqrt(k))
+        while k % rows:
+            rows -= 1
+        self.rows, self.cols = rows, k // rows
+        super().init_for_resume(stream, k, timer)
+
 
 class _RandomPartitioner(_HashPartitioner):
     def __init__(self, spec: StatelessSpec):
@@ -482,11 +574,11 @@ def build_partitioner(spec: PartitionerSpec) -> StreamingPartitioner:
 # the one driver
 # ---------------------------------------------------------------------------
 
-def _traced_chunks(it, tracer, stall):
+def _traced_chunks(it, tracer, stall, start=0):
     """Wrap the raw chunk iterator so each read/decode is credited to the
     prefetch stage *on whatever thread runs it* (the prefetch thread at
     depth >= 2, inline on the main thread at depth 1)."""
-    i = 0
+    i = start
     while True:
         t0 = time.perf_counter()
         try:
@@ -506,7 +598,11 @@ _STREAM_END = object()
 def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
              out_path: str | None = None,
              degrees: np.ndarray | None = None,
-             tracer=None, metrics=None) -> PartitionRunResult:
+             tracer=None, metrics=None,
+             retry_policy=None,
+             checkpoint_every_chunks: int | None = None,
+             checkpoint_dir: str | None = None,
+             resume_from: str | None = None) -> PartitionRunResult:
     """Execute a PartitionerSpec over an edge stream (see module docstring
     for the pipeline model).
 
@@ -537,20 +633,72 @@ def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
         res.quality.replication_factor   # the paper's RF
         res.timings                      # {'degrees': ..., 'scoring': ...,
                                          #  'writeback': ..., 'finalize': ...}
+
+    Robustness (``repro.robust``, guide: docs/robustness.md):
+
+    * ``retry_policy`` (``repro.robust.RetryPolicy``) wraps the stream in
+      a validating ``ResilientStream`` — every chunk read (degree pass,
+      clustering, and all partitioning passes) is checked against the
+      stream geometry and retried with bounded backoff on failure;
+      recoveries land in ``engine.io_retries`` and
+      ``extras['io_retries']``.
+    * ``checkpoint_every_chunks=N`` (requires ``checkpoint_dir``) drains
+      the in-flight writeback deque every N dispatched chunks and
+      atomically snapshots the engine's O(|V|) pass state plus the
+      chunk cursor.
+    * ``resume_from=dir`` restarts from the latest checkpoint in ``dir``
+      (a fresh run when the directory holds none) and replays the
+      remaining chunks into **bit-identical** final assignments;
+      ``extras['resumes']`` counts the lineage's resumes.  Memmap runs
+      must pass the same ``out_path`` — the partial assignment is
+      re-opened in place, never copied into the checkpoint.
     """
+    if checkpoint_every_chunks is not None:
+        if checkpoint_every_chunks < 1:
+            raise ValueError("checkpoint_every_chunks must be >= 1")
+        if checkpoint_dir is None:
+            raise ValueError("checkpoint_every_chunks requires "
+                             "checkpoint_dir")
+    if retry_policy is not None:
+        from ..robust.faults import ResilientStream
+        stream = ResilientStream(stream, retry_policy)
     tracer = get_tracer() if tracer is None else tracer
     metrics = get_registry() if metrics is None else metrics
     with use_tracer(tracer), use_registry(metrics):
         return _run_spec_traced(spec, stream, k, out_path, degrees,
-                                tracer, metrics)
+                                tracer, metrics, checkpoint_every_chunks,
+                                checkpoint_dir, resume_from)
 
 
-def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
+def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
+                     ckpt_every=None, ckpt_dir=None, resume_from=None):
     part = build_partitioner(spec)
     timer = _Timer()
-    with tracer.span("init", cat="engine", algorithm=spec.algorithm, k=k):
-        state = part.init_state(stream, k, timer, degrees)
-    assignment = _alloc_assignment(stream.num_edges, out_path)
+    ckpt = None
+    if resume_from is not None:
+        from ..robust import checkpoint as _ck
+        ckpt = _ck.load_engine_checkpoint(resume_from)
+        if ckpt is not None:
+            _ck.check_compatible(ckpt.meta, spec, stream, k, out_path)
+    if ckpt is not None:
+        with tracer.span("resume", cat="engine", algorithm=spec.algorithm,
+                         pass_index=int(ckpt.meta["pass_index"]),
+                         next_chunk=int(ckpt.meta["next_chunk"])):
+            part.init_for_resume(stream, k, timer)
+            part.restore_host_state(ckpt.host_state)
+            state = {name: jnp.asarray(arr)
+                     for name, arr in ckpt.device_state.items()}
+        assignment = _alloc_assignment(stream.num_edges, out_path,
+                                       resume=True)
+        if ckpt.assignment is not None:
+            assignment[:] = ckpt.assignment
+        timer.lap("resume")
+        metrics.counter("engine.resumes").inc()
+    else:
+        with tracer.span("init", cat="engine", algorithm=spec.algorithm,
+                         k=k):
+            state = part.init_state(stream, k, timer, degrees)
+        assignment = _alloc_assignment(stream.num_edges, out_path)
     depth = spec.pipeline_depth
     inflight_gauge = metrics.gauge("engine.chunks_in_flight")
     edges_ctr = metrics.counter("engine.edges_streamed")
@@ -558,18 +706,30 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
     dispatch_hist = metrics.histogram("engine.dispatch_seconds")
     writeback_hist = metrics.histogram("engine.writeback_seconds")
 
-    pass_counts: dict[str, int] = {}
+    resumes = int(ckpt.meta["resumes"]) + 1 if ckpt is not None else 0
+    checkpoints_written = 0
+    start_pass = int(ckpt.meta["pass_index"]) if ckpt is not None else 0
+    pass_counts: dict[str, int] = (
+        {kk: int(v) for kk, v in ckpt.meta["pass_counts"].items()}
+        if ckpt is not None else {})
     pass_stalls = []
     passes_wall = 0.0
-    for sp in part.passes():
-        if sp.setup is not None:
+    for pi, sp in enumerate(part.passes()):
+        if pi < start_pass:
+            continue                # completed before the checkpoint
+        resuming_here = ckpt is not None and pi == start_pass
+        # the checkpointed device state is post-setup for the pass in
+        # flight, so setup must not run again on resume
+        if sp.setup is not None and not resuming_here:
             with tracer.span("setup", cat="engine", phase=sp.phase):
                 state = sp.setup(state)
         stall = StallClock()
         inflight: deque = deque()   # (lo, chunk_np, n, device asg, index)
-        assigned = 0
-        lo = 0
+        assigned = int(ckpt.meta["assigned"]) if resuming_here else 0
+        lo = int(ckpt.meta["edge_lo"]) if resuming_here else 0
+        first_chunk = int(ckpt.meta["next_chunk"]) if resuming_here else 0
         wb_host = 0.0               # host-side writeback seconds this pass
+        ckpt_host = 0.0             # checkpoint-save seconds this pass
 
         def _writeback():
             nonlocal assigned, wb_host
@@ -596,13 +756,61 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
             writeback_hist.observe(t2 - t0)
             wb_host += t2 - t1
 
+        def _save_checkpoint(next_chunk):
+            nonlocal checkpoints_written, ckpt_host
+            from ..robust import checkpoint as _ck
+            t0 = time.perf_counter()
+            # consistency barrier: drain the pipeline so state, the
+            # assignment rows below ``lo``, and the cursor all agree
+            while inflight:
+                _writeback()
+            jax.block_until_ready(state)
+            if not isinstance(state, dict):
+                raise TypeError("engine checkpointing requires the "
+                                "partitioner state to be a flat dict of "
+                                "arrays")
+            if isinstance(assignment, np.memmap):
+                assignment.flush()
+                asg_copy = None
+            else:
+                asg_copy = np.array(assignment, copy=True)
+            meta = {"spec_hash": _ck.spec_hash(spec),
+                    "algorithm": spec.algorithm, "k": int(k),
+                    "num_edges": int(stream.num_edges),
+                    "num_vertices": int(stream.num_vertices),
+                    "chunk_size": int(spec.chunk_size),
+                    "pass_index": pi, "next_chunk": int(next_chunk),
+                    "edge_lo": int(lo), "assigned": int(assigned),
+                    "pass_counts": dict(pass_counts),
+                    "resumes": resumes,
+                    "assignment_in_checkpoint": asg_copy is not None}
+            _ck.save_engine_checkpoint(ckpt_dir, _ck.EngineCheckpoint(
+                meta=meta,
+                device_state={n: np.asarray(v) for n, v in state.items()},
+                host_state=part.host_state(), assignment=asg_copy))
+            dt = time.perf_counter() - t0
+            ckpt_host += dt
+            checkpoints_written += 1
+            tracer.complete("checkpoint", "robust", dt, pass_index=pi,
+                            next_chunk=int(next_chunk))
+            metrics.counter("engine.checkpoints").inc()
+            # deterministic crash hook for the crash-resume tests and the
+            # CI smoke stage: die hard (no atexit, no flush) after the
+            # nth successful checkpoint write
+            limit = int(os.environ.get("REPRO_CRASH_AFTER_CHECKPOINTS",
+                                       "0") or 0)
+            if limit and checkpoints_written >= limit:
+                os._exit(137)
+
         # wrap the raw iterator (prefetch-stage attribution in the
         # producer thread), then apply the engine's bounded readahead —
         # identical chunk sequence to stream.iter_chunks_prefetch
-        it = prefetch(_traced_chunks(stream.iter_chunks(spec.chunk_size),
-                                     tracer, stall),
+        it = prefetch(_traced_chunks(
+                          stream.iter_chunks_from(spec.chunk_size,
+                                                  first_chunk),
+                          tracer, stall, start=first_chunk),
                       readahead=depth - 1)
-        ci = 0
+        ci = first_chunk
         try:
             with tracer.span(f"pass:{sp.phase}", cat="engine",
                              depth=depth, merge=sp.merge):
@@ -629,6 +837,8 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
                     ci += 1
                     while len(inflight) >= depth:
                         _writeback()
+                    if ckpt_every and ci % ckpt_every == 0:
+                        _save_checkpoint(ci)
                 while inflight:
                     _writeback()
                 tdr = time.perf_counter()
@@ -640,8 +850,10 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
         finally:
             if hasattr(it, "close"):
                 it.close()          # joins the prefetch thread on error
-        timer.lap(sp.phase, exclude=wb_host)
+        timer.lap(sp.phase, exclude=wb_host + ckpt_host)
         timer.add("writeback", wb_host)
+        if ckpt_host:
+            timer.add("checkpoint", ckpt_host)
         pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + assigned
         ps = stall.report(sp.phase)
         pass_stalls.append(ps)
@@ -661,6 +873,13 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics):
     if tracer.enabled:
         extras["stall_report"] = PipelineStallReport(
             passes=pass_stalls).to_dict()
+    if resumes:
+        extras["resumes"] = resumes
+    if ckpt_every:
+        extras["checkpoints_written"] = checkpoints_written
+    io_retries = getattr(stream, "retries", None)
+    if io_retries is not None:
+        extras["io_retries"] = int(io_retries)
     if getattr(part, "num_hosts", 0):
         # hierarchy-aware quality: how many host groups each vertex spans
         # (== the DCN synchronization volume a host-grouped halo exchange

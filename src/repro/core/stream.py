@@ -99,6 +99,19 @@ class EdgeStream:
     def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
         raise NotImplementedError
 
+    def iter_chunks_from(self, chunk_size: int,
+                         start_chunk: int = 0) -> Iterator[np.ndarray]:
+        """``iter_chunks`` starting at chunk index ``start_chunk`` — how a
+        resumed engine pass (repro.robust) re-enters the stream mid-pass,
+        and how a retrying reader re-opens at a failed chunk.  The base
+        implementation reads and discards the skipped prefix; seekable
+        streams (in-memory, memmap) override with an O(1) jump."""
+        it = self.iter_chunks(chunk_size)
+        for _ in range(start_chunk):
+            if next(it, None) is None:
+                return
+        yield from it
+
     def iter_chunks_prefetch(self, chunk_size: int,
                              readahead: int = 0) -> Iterator[np.ndarray]:
         """``iter_chunks`` with up to ``readahead`` chunks read ahead on a
@@ -127,6 +140,12 @@ class InMemoryEdgeStream(EdgeStream):
         for lo in range(0, self.num_edges, chunk_size):
             yield self.edges[lo:lo + chunk_size]
 
+    def iter_chunks_from(self, chunk_size: int,
+                         start_chunk: int = 0) -> Iterator[np.ndarray]:
+        for lo in range(start_chunk * chunk_size, self.num_edges,
+                        chunk_size):
+            yield self.edges[lo:lo + chunk_size]
+
 
 class MemmapEdgeStream(EdgeStream):
     """Paper-format binary edge list (32-bit vertex id pairs) on disk."""
@@ -151,6 +170,12 @@ class MemmapEdgeStream(EdgeStream):
         for lo in range(0, self.num_edges, chunk_size):
             yield np.asarray(self._mm[lo:lo + chunk_size]).astype(np.int32)
 
+    def iter_chunks_from(self, chunk_size: int,
+                         start_chunk: int = 0) -> Iterator[np.ndarray]:
+        for lo in range(start_chunk * chunk_size, self.num_edges,
+                        chunk_size):
+            yield np.asarray(self._mm[lo:lo + chunk_size]).astype(np.int32)
+
     @staticmethod
     def write(path: str, edges: np.ndarray) -> "MemmapEdgeStream":
         arr = np.ascontiguousarray(edges, dtype=np.uint32)
@@ -171,6 +196,15 @@ class ThrottledEdgeStream(EdgeStream):
     def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
         for chunk in self.inner.iter_chunks(chunk_size):
             self._io_seconds += chunk.shape[0] * BYTES_PER_EDGE / self.read_bytes_per_sec
+            yield chunk
+
+    def iter_chunks_from(self, chunk_size: int,
+                         start_chunk: int = 0) -> Iterator[np.ndarray]:
+        # a resumed pass never re-reads the skipped prefix, so it pays no
+        # simulated IO for it
+        for chunk in self.inner.iter_chunks_from(chunk_size, start_chunk):
+            self._io_seconds += (chunk.shape[0] * BYTES_PER_EDGE
+                                 / self.read_bytes_per_sec)
             yield chunk
 
     @property

@@ -37,6 +37,13 @@ Outputs, from lightest to heaviest:
                           (stateful algorithms only; 0 = flat scoring,
                           bit-identical to omitting the flag).
 
+Robustness (``repro.robust``, see docs/robustness.md):
+``--checkpoint-every N`` snapshots the engine's pass state atomically
+every N chunks (``--checkpoint-dir`` defaults to
+``<artifact-dir>/checkpoints``); ``--resume`` restarts from the latest
+checkpoint into a bit-identical final assignment; ``--io-retries R``
+validates and retries chunk reads with bounded backoff.
+
 Observability (``repro.obs``, see docs/observability.md): ``--trace
 out.json`` records every pipeline stage, halo-planning step, and pass as
 Chrome ``trace_event`` spans (open in Perfetto), ``--trace-summary``
@@ -120,6 +127,25 @@ def main(argv=None):
                          "over-cap pairs to the psum overflow lane)")
     ap.add_argument("--throttle-mbps", type=float, default=None,
                     help="simulate a storage device with this read rate")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="N",
+                    help="write a crash-safe engine checkpoint every N "
+                         "chunks (drains the pipeline, snapshots the "
+                         "O(|V|) pass state atomically; see "
+                         "docs/robustness.md)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="where checkpoints live (default: "
+                         "<artifact-dir>/checkpoints when --artifact-dir "
+                         "is given)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir (fresh run if none); the "
+                         "resumed run's final assignment is bit-identical "
+                         "to an uninterrupted one")
+    ap.add_argument("--io-retries", type=int, default=None, metavar="R",
+                    help="validate every chunk read and retry failures up "
+                         "to R times with bounded backoff "
+                         "(engine.io_retries in the report/manifest)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record spans (pipeline stages per chunk, halo "
                          "planning, passes) and metrics to a Chrome "
@@ -146,6 +172,13 @@ def main(argv=None):
     if args.dcn_penalty and args.algorithm in ("dbh", "grid", "random"):
         ap.error(f"--dcn-penalty only applies to scoring algorithms; "
                  f"{args.algorithm!r} hashes")
+    checkpoint_dir = args.checkpoint_dir
+    if checkpoint_dir is None and args.artifact_dir and (
+            args.checkpoint_every or args.resume):
+        checkpoint_dir = os.path.join(args.artifact_dir, "checkpoints")
+    if (args.checkpoint_every or args.resume) and checkpoint_dir is None:
+        ap.error("--checkpoint-every/--resume need --checkpoint-dir "
+                 "(or --artifact-dir to default it)")
 
     stream = MemmapEdgeStream(args.input)
     if args.throttle_mbps:
@@ -177,7 +210,15 @@ def main(argv=None):
     registry = obs.MetricsRegistry() if traced else obs.NULL_REGISTRY
     with obs.jax_profiler_session(args.jax_profile), \
             obs.use_tracer(tracer), obs.use_registry(registry):
-        res = run_spec(spec, stream, args.k, out_path=out_path)
+        retry_policy = None
+        if args.io_retries is not None:
+            from repro.robust import RetryPolicy
+            retry_policy = RetryPolicy(max_retries=args.io_retries)
+        res = run_spec(spec, stream, args.k, out_path=out_path,
+                       retry_policy=retry_policy,
+                       checkpoint_every_chunks=args.checkpoint_every,
+                       checkpoint_dir=checkpoint_dir,
+                       resume_from=checkpoint_dir if args.resume else None)
 
         report = {
             "algorithm": res.name, "k": args.k,

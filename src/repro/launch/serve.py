@@ -87,7 +87,9 @@ def serve_recsys(arch_id: str = "dien", *, batch: int = 64, seed: int = 0):
 
 def serve_gnn(artifact_dir: str, *, n_requests: int = 32, roots_per: int = 4,
               fanouts=(-1, -1), cache_budget: int = 1 << 16, seed: int = 0,
-              d_in: int = 8, n_classes: int = 4, no_cache: bool = False):
+              d_in: int = 8, n_classes: int = 4, no_cache: bool = False,
+              fetch_timeout_s: float = 1.0, fetch_retries: int = 2,
+              inject_fetch_faults: int = 0):
     """Answer ego-network inference requests against a partition artifact.
 
     Per request: route to the roots' home partition, sample a k-hop
@@ -96,11 +98,22 @@ def serve_gnn(artifact_dir: str, *, n_requests: int = 32, roots_per: int = 4,
     hot-vertex cache, run a jitted GIN-style forward at fixed caps.
     The cache only short-circuits the remote fetch — logits are
     bit-identical with ``no_cache=True``.
+
+    The remote fetch runs behind a ``repro.robust.ResilientFetcher``:
+    each call gets ``fetch_timeout_s`` on a worker thread and up to
+    ``fetch_retries`` retries with bounded backoff; on exhaustion the
+    batch is served **degraded** (zero rows for the unfetchable vertices,
+    counted in the report's ``fetch_failures`` and the
+    ``serve.fetch_failures`` metric) instead of killing the serve loop.
+    ``inject_fetch_faults=N`` deterministically fails the first N fetch
+    calls — N <= fetch_retries recovers bit-identically, larger N
+    demonstrates degradation.
     """
     from repro import obs
     from repro.core import PartitionArtifact
     from repro.models.gnn import GINConfig, gin_init
     from repro.models.gnn import segsum as _seg
+    from repro.robust import ResilientFetcher, RetryPolicy
     from repro.sample import (HotVertexFeatureCache, PartitionedGraph,
                               PartitionedNeighborSampler, build_local_graphs)
     import repro.models.layers as L
@@ -117,14 +130,22 @@ def serve_gnn(artifact_dir: str, *, n_requests: int = 32, roots_per: int = 4,
     # synthetic feature store: each partition holds its masters' rows;
     # remote rows come through the cache (the fetch stands in for a
     # cross-partition RPC)
-    remote_fetches = {"rows": 0}
+    remote_fetches = {"rows": 0, "calls": 0}
 
     def remote_fetch(gids):
+        remote_fetches["calls"] += 1
+        if remote_fetches["calls"] <= inject_fetch_faults:
+            raise IOError(f"injected fetch fault "
+                          f"(call {remote_fetches['calls']})")
         remote_fetches["rows"] += len(gids)
         return feats[gids]
 
+    fetcher = ResilientFetcher(
+        remote_fetch, d_in, timeout_s=fetch_timeout_s,
+        policy=RetryPolicy(max_retries=fetch_retries,
+                           backoff_base_s=0.001))
     cache = None if no_cache else HotVertexFeatureCache(
-        remote_fetch, d_in, byte_budget=cache_budget, degrees=degrees)
+        fetcher, d_in, byte_budget=cache_budget, degrees=degrees)
 
     cfg = GINConfig(name="gin-serve", n_layers=len(fanouts), d_hidden=32,
                     d_in=d_in, n_classes=n_classes)
@@ -155,7 +176,7 @@ def serve_gnn(artifact_dir: str, *, n_requests: int = 32, roots_per: int = 4,
         rows[local] = feats[gids[local]]               # home shard read
         if (~local).any():
             rows[~local] = (cache.get(gids[~local]) if cache is not None
-                            else remote_fetch(gids[~local]))
+                            else fetcher(gids[~local]))
         return rows
 
     tracer = obs.get_tracer()
@@ -192,10 +213,13 @@ def serve_gnn(artifact_dir: str, *, n_requests: int = 32, roots_per: int = 4,
         "cache": {kk: (round(v, 4) if isinstance(v, float) else v)
                   for kk, v in stats.items()},
         "remote_rows_fetched": remote_fetches["rows"],
+        "fetch_failures": fetcher.failures,
+        "fetch_retries": fetcher.retries,
     }
     print(f"gnn: {n_requests} requests on {artifact_dir} (k={art.k}) "
           f"p50 {report['p50_ms']}ms p99 {report['p99_ms']}ms "
-          f"cache hit-rate {report['cache']['hit_rate']}")
+          f"cache hit-rate {report['cache']['hit_rate']} "
+          f"degraded rows {fetcher.failures}")
     return np.concatenate(all_logits), report
 
 
@@ -213,6 +237,19 @@ def main(argv=None):
     ap.add_argument("--cache-budget", type=int, default=1 << 16,
                     help="hot-vertex feature cache budget in bytes")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--fetch-timeout", type=float, default=1.0,
+                    help="per-call deadline (s) for the remote feature "
+                         "fetch; a slow store degrades instead of hanging "
+                         "the serve loop")
+    ap.add_argument("--fetch-retries", type=int, default=2,
+                    help="retries with bounded backoff before serving a "
+                         "degraded (zero-feature) batch")
+    ap.add_argument("--inject-fetch-faults", type=int, default=0,
+                    metavar="N",
+                    help="deterministically fail the first N remote "
+                         "fetches (N <= --fetch-retries recovers "
+                         "bit-identically; larger N demonstrates "
+                         "degraded serving)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="print a machine-readable report (one JSON object)")
@@ -222,7 +259,10 @@ def main(argv=None):
             args.gnn_artifact, n_requests=args.requests,
             roots_per=args.roots_per, fanouts=tuple(args.fanout),
             cache_budget=args.cache_budget, seed=args.seed,
-            no_cache=args.no_cache)
+            no_cache=args.no_cache,
+            fetch_timeout_s=args.fetch_timeout,
+            fetch_retries=args.fetch_retries,
+            inject_fetch_faults=args.inject_fetch_faults)
     elif get_arch(args.arch).family == "recsys":
         _, report = serve_recsys(args.arch, batch=args.requests)
     else:

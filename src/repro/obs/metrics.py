@@ -14,6 +14,10 @@ instead of scraping prints.  Canonical instrument names:
                                  gauge    final replication bit-matrix size
     engine.dispatch_seconds      histogram  per-chunk host dispatch time
     engine.writeback_seconds     histogram  per-chunk writeback time
+    engine.io_retries            counter  chunk reads recovered by the
+                                          retrying stream (repro.robust)
+    engine.checkpoints           counter  engine checkpoints written
+    engine.resumes               counter  runs restarted from a checkpoint
     halo.boundary_rows           gauge    flat pairwise exchange rows
     halo.dcn_rows_aggregated     gauge    host-grouped DCN lane rows
     halo.dcn_rows_naive          gauge    rows a flat layout would ship
@@ -31,6 +35,8 @@ instead of scraping prints.  Canonical instrument names:
     sample.local_graphs_built    gauge    partitions lowered to local CSC
     serve.p50_ms / serve.p99_ms  gauge    request latency percentiles
                                           (compile warm-up excluded)
+    serve.fetch_failures         counter  feature rows served degraded
+                                          after fetch retry exhaustion
 
 Instruments are get-or-create by name (``registry.counter("x")``), all
 updates are thread-safe, and ``registry.snapshot()`` returns plain dicts.

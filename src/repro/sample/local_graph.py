@@ -137,10 +137,11 @@ class LocalGraph:
                "csr_indptr", "csr_dst", "csr_eid")
 
     def save(self, dirpath: str) -> str:
+        from repro.robust.integrity import savez_atomic
         path = os.path.join(dirpath,
                             LOCAL_GRAPH_FILE_FMT.format(i=self.part_id))
-        np.savez(path, part_id=self.part_id,
-                 **{a: getattr(self, a) for a in self._ARRAYS})
+        savez_atomic(path, part_id=self.part_id,
+                     **{a: getattr(self, a) for a in self._ARRAYS})
         return path
 
     @classmethod

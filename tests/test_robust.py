@@ -1,0 +1,515 @@
+"""Crash-safe partitioning (repro.robust): fault-injected streams with
+bounded retry, chunk-boundary engine checkpoints with bit-identical
+resume across every spec, artifact integrity checksums, and degraded
+feature serving."""
+import glob
+import os
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (InMemoryEdgeStream, PartitionArtifact,
+                        SPEC_REGISTRY, run_spec, spec_for)
+from repro.robust import (ArtifactIntegrityError, ChunkFault,
+                          ChunkReadError, EngineCheckpoint, FaultyStream,
+                          ResilientFetcher, ResilientStream, RetryPolicy,
+                          latest_checkpoint, load_engine_checkpoint,
+                          save_engine_checkpoint, spec_hash)
+from repro.robust.checkpoint import CheckpointMismatchError, check_compatible
+
+ALL_ALGOS = sorted(SPEC_REGISTRY)
+_CHUNKS = {"2psl": 512, "2ps-hdrf": 512, "hdrf": 512, "greedy": 512,
+           "dbh": 1024, "grid": 1024, "random": 1024}
+
+_NO_SLEEP = RetryPolicy(max_retries=3, backoff_base_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def seed_graph():
+    rng = np.random.default_rng(11)
+    e = rng.integers(0, 400, (4000, 2)).astype(np.int32)
+    return e[e[:, 0] != e[:, 1]]
+
+
+@pytest.fixture(scope="module")
+def stream(seed_graph):
+    return InMemoryEdgeStream(seed_graph, num_vertices=400)
+
+
+def _fresh(seed_graph):
+    return InMemoryEdgeStream(seed_graph, num_vertices=400)
+
+
+# ---------------------------------------------------------------------------
+# FaultyStream: deterministic chunk-indexed fault injection
+# ---------------------------------------------------------------------------
+
+def test_faulty_stream_ioerror_raises_then_heals(stream):
+    fs = FaultyStream(stream, [ChunkFault(1, "ioerror", count=1)])
+    it = fs.iter_chunks(512)
+    next(it)
+    with pytest.raises(IOError):
+        next(it)
+    # the failed attempt consumed the fault budget: a re-opened read of the
+    # same chunk succeeds and matches the clean stream
+    clean = list(stream.iter_chunks(512))
+    got = list(fs.iter_chunks_from(512, 1))
+    np.testing.assert_array_equal(got[0], clean[1])
+    assert fs.fired == 1
+
+
+def test_faulty_stream_partial_and_corrupt(stream):
+    clean = list(stream.iter_chunks(512))
+    fs = FaultyStream(stream, [ChunkFault(0, "partial"),
+                               ChunkFault(2, "corrupt")])
+    chunks = list(fs.iter_chunks(512))
+    assert chunks[0].shape[0] == clean[0].shape[0] // 2
+    assert int(chunks[2].max()) >= stream.num_vertices   # ids out of range
+    np.testing.assert_array_equal(chunks[1], clean[1])
+
+
+def test_faulty_stream_counts_attempts_across_passes(stream):
+    fs = FaultyStream(stream, [ChunkFault(0, "ioerror", count=2)])
+    for _ in range(2):
+        with pytest.raises(IOError):
+            next(fs.iter_chunks(512))
+    np.testing.assert_array_equal(next(fs.iter_chunks(512)),
+                                  next(stream.iter_chunks(512)))
+
+
+def test_chunk_fault_validation():
+    with pytest.raises(ValueError):
+        ChunkFault(0, "gamma-ray")
+    with pytest.raises(ValueError):
+        ChunkFault(-1)
+    with pytest.raises(ValueError):
+        FaultyStream(InMemoryEdgeStream(np.zeros((4, 2), np.int32)),
+                     [ChunkFault(0), ChunkFault(0)])
+
+
+# ---------------------------------------------------------------------------
+# ResilientStream: validate + retry with bounded backoff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ioerror", "partial", "corrupt"])
+def test_resilient_stream_recovers_each_fault_kind(stream, kind):
+    fs = FaultyStream(stream, [ChunkFault(2, kind, count=2)])
+    rs = ResilientStream(fs, _NO_SLEEP)
+    got = np.concatenate(list(rs.iter_chunks(512)))
+    clean = np.concatenate(list(stream.iter_chunks(512)))
+    np.testing.assert_array_equal(got, clean)
+    assert rs.retries == 2
+
+
+def test_resilient_stream_exhausts_into_chunk_read_error(stream):
+    fs = FaultyStream(stream, [ChunkFault(1, "ioerror", count=10 ** 9)])
+    rs = ResilientStream(fs, RetryPolicy(max_retries=2, backoff_base_s=0.0))
+    with pytest.raises(ChunkReadError, match="giving up"):
+        list(rs.iter_chunks(512))
+    assert rs.retries == 2
+
+
+def test_resilient_stream_backoff_schedule():
+    p = RetryPolicy(max_retries=5, backoff_base_s=0.01, backoff_factor=2.0,
+                    max_backoff_s=0.03)
+    assert [p.backoff_s(a) for a in range(4)] == [0.01, 0.02, 0.03, 0.03]
+
+
+def test_run_spec_retry_policy_is_bit_identical(seed_graph, stream):
+    clean = run_spec(spec_for("2psl", chunk_size=512), stream, 8)
+    faulty = FaultyStream(_fresh(seed_graph),
+                          [ChunkFault(0, "ioerror"), ChunkFault(2, "partial"),
+                           ChunkFault(4, "corrupt", count=2)])
+    res = run_spec(spec_for("2psl", chunk_size=512), faulty, 8,
+                   retry_policy=_NO_SLEEP)
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert res.extras["io_retries"] == 4
+    assert res.quality.replication_factor \
+        == clean.quality.replication_factor
+    assert res.quality.balance == clean.quality.balance
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store: atomic roundtrip, latest, cleanup, compatibility
+# ---------------------------------------------------------------------------
+
+def _meta(spec, stream, k=8, pass_index=0, next_chunk=1, **kw):
+    base = {"spec_hash": spec_hash(spec), "algorithm": spec.algorithm,
+            "k": k, "num_edges": stream.num_edges,
+            "num_vertices": stream.num_vertices, "chunk_size": 512,
+            "pass_index": pass_index, "next_chunk": next_chunk,
+            "edge_lo": next_chunk * 512, "assigned": 0, "pass_counts": {},
+            "resumes": 0, "assignment_in_checkpoint": True}
+    base.update(kw)
+    return base
+
+
+def test_checkpoint_roundtrip(tmp_path, stream):
+    spec = spec_for("2psl", chunk_size=512)
+    ck = EngineCheckpoint(
+        meta=_meta(spec, stream),
+        device_state={"sizes": np.arange(8, dtype=np.int32)},
+        host_state={"bits": np.arange(12, dtype=np.uint32)},
+        assignment=np.full(stream.num_edges, -1, np.int32))
+    save_engine_checkpoint(str(tmp_path), ck)
+    got = load_engine_checkpoint(str(tmp_path))
+    assert got.meta == ck.meta
+    np.testing.assert_array_equal(got.device_state["sizes"],
+                                  ck.device_state["sizes"])
+    assert got.device_state["sizes"].dtype == np.int32
+    np.testing.assert_array_equal(got.host_state["bits"],
+                                  ck.host_state["bits"])
+    assert got.host_state["bits"].dtype == np.uint32
+    np.testing.assert_array_equal(got.assignment, ck.assignment)
+
+
+def test_latest_checkpoint_ignores_tmp_and_keeps_n(tmp_path, stream):
+    spec = spec_for("2psl", chunk_size=512)
+    for nc in (1, 2, 3, 4):
+        save_engine_checkpoint(
+            str(tmp_path),
+            EngineCheckpoint(meta=_meta(spec, stream, next_chunk=nc)),
+            keep_n=2)
+    done = sorted(d for d in os.listdir(tmp_path) if not d.endswith(".tmp"))
+    assert done == ["ckpt_00_00000003", "ckpt_00_00000004"]
+    # a torn (still-*.tmp) checkpoint write is invisible
+    os.makedirs(tmp_path / "ckpt_00_00000009.tmp")
+    assert latest_checkpoint(str(tmp_path)).endswith("ckpt_00_00000004")
+    assert latest_checkpoint(str(tmp_path / "nope")) is None
+    assert load_engine_checkpoint(str(tmp_path / "nope")) is None
+
+
+def test_check_compatible_rejects_mismatches(tmp_path, stream):
+    spec = spec_for("2psl", chunk_size=512)
+    meta = _meta(spec, stream)
+    check_compatible(meta, spec, stream, 8, None)          # clean: no raise
+    with pytest.raises(CheckpointMismatchError, match="PartitionerSpec"):
+        check_compatible(meta, spec_for("2psl", chunk_size=512, alpha=1.3),
+                         stream, 8, None)
+    with pytest.raises(CheckpointMismatchError, match="k="):
+        check_compatible(meta, spec, stream, 16, None)
+    with pytest.raises(CheckpointMismatchError, match="assignment sink"):
+        check_compatible(meta, spec, stream, 8,
+                         str(tmp_path / "a.bin"))
+    meta2 = dict(meta, assignment_in_checkpoint=False)
+    with pytest.raises(CheckpointMismatchError, match="does not exist"):
+        check_compatible(meta2, spec, stream, 8, str(tmp_path / "a.bin"))
+
+
+def test_run_spec_checkpoint_args_validated(stream):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_spec(spec_for("random", chunk_size=1024), stream, 8,
+                 checkpoint_every_chunks=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        run_spec(spec_for("random", chunk_size=1024), stream, 8,
+                 checkpoint_every_chunks=0, checkpoint_dir="x")
+
+
+# ---------------------------------------------------------------------------
+# engine resume: bit-identical restart for every spec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_ALGOS)
+def test_resume_from_mid_run_checkpoint_bit_identical(name, seed_graph,
+                                                      stream, tmp_path):
+    """Checkpoint every 3 chunks, then restart from the LATEST snapshot —
+    replaying only the tail of the final pass must reproduce the clean
+    assignment bit for bit (for 2PS specs the latest checkpoint sits
+    inside the merge/scoring pass, crossing the prepartition boundary)."""
+    spec = spec_for(name, chunk_size=_CHUNKS[name])
+    clean = run_spec(spec, stream, 8)
+    d = str(tmp_path / "ck")
+    run_spec(spec, stream, 8, checkpoint_every_chunks=3, checkpoint_dir=d)
+    ck = load_engine_checkpoint(d)
+    if name in ("2psl", "2ps-hdrf"):
+        assert ck.meta["pass_index"] == 1      # mid scoring (merge) pass
+    res = run_spec(spec, stream, 8, resume_from=d)
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert res.extras["resumes"] == 1
+    assert res.quality.replication_factor \
+        == clean.quality.replication_factor
+
+
+@pytest.mark.parametrize("name", ["hdrf", "greedy", "random"])
+def test_interrupted_run_resumes_bit_identical(name, seed_graph, stream,
+                                               tmp_path):
+    """A permanent IO fault (no retry budget) aborts the single-pass run
+    after two checkpoints; a resumed run with a healthy stream finishes
+    into the clean assignment."""
+    spec = spec_for(name, chunk_size=_CHUNKS[name])
+    clean = run_spec(spec, stream, 8)
+    d = str(tmp_path / "ck")
+    dead = FaultyStream(_fresh(seed_graph),
+                        [ChunkFault(5 if name == "hdrf" else 3, "ioerror",
+                                    count=10 ** 9)])
+    with pytest.raises(IOError):
+        run_spec(spec, dead, 8, checkpoint_every_chunks=2, checkpoint_dir=d)
+    assert latest_checkpoint(d) is not None
+    res = run_spec(spec, stream, 8, checkpoint_every_chunks=2,
+                   checkpoint_dir=d, resume_from=d)
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert res.extras["resumes"] == 1
+
+
+def test_resume_memmap_out_path_rewrites_tail(seed_graph, stream, tmp_path):
+    """Memmap-backed runs re-open out_path in place; garbage past the
+    checkpointed cursor (a torn post-checkpoint write) is rewritten by
+    the replay."""
+    spec = spec_for("hdrf", chunk_size=512)
+    out_clean = str(tmp_path / "clean.bin")
+    run_spec(spec, stream, 8, out_path=out_clean)
+    out = str(tmp_path / "a.bin")
+    d = str(tmp_path / "ck")
+    run_spec(spec, stream, 8, out_path=out, checkpoint_every_chunks=3,
+             checkpoint_dir=d)
+    ck = load_engine_checkpoint(d)
+    mm = np.memmap(out, dtype=np.int32, mode="r+")
+    mm[ck.meta["edge_lo"]:] = 7
+    mm.flush()
+    del mm
+    res = run_spec(spec, stream, 8, out_path=out, resume_from=d)
+    assert isinstance(res.assignment, np.memmap)
+    np.testing.assert_array_equal(np.fromfile(out, np.int32),
+                                  np.fromfile(out_clean, np.int32))
+
+
+def test_resume_memmap_vs_inmemory_modality_guard(stream, tmp_path):
+    spec = spec_for("random", chunk_size=1024)
+    d = str(tmp_path / "ck")
+    run_spec(spec, stream, 8, checkpoint_every_chunks=2, checkpoint_dir=d)
+    with pytest.raises(CheckpointMismatchError, match="assignment sink"):
+        run_spec(spec, stream, 8, out_path=str(tmp_path / "a.bin"),
+                 resume_from=d)
+
+
+def test_resume_from_empty_dir_is_fresh_run(stream, tmp_path):
+    spec = spec_for("2psl", chunk_size=512)
+    clean = run_spec(spec, stream, 8)
+    res = run_spec(spec, stream, 8, resume_from=str(tmp_path / "none"))
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert "resumes" not in res.extras
+
+
+def test_checkpointed_run_is_bit_identical_to_plain(stream, tmp_path):
+    """Checkpointing only observes the pipeline (drain + snapshot); it
+    must never change the output."""
+    spec = spec_for("2ps-hdrf", chunk_size=512)
+    clean = run_spec(spec, stream, 8)
+    res = run_spec(spec, stream, 8, checkpoint_every_chunks=2,
+                   checkpoint_dir=str(tmp_path / "ck"))
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert res.extras["checkpoints_written"] > 0
+
+
+# ---------------------------------------------------------------------------
+# property suite: kill at any checkpoint boundary x spec x depth
+# ---------------------------------------------------------------------------
+
+@st.composite
+def resume_cases(draw):
+    """(algorithm, seed, depth, checkpoint_every): fuzzed engine knobs for
+    the resume-equivalence property.  The graph is built from the drawn
+    seed so each case is deterministic."""
+    name = draw(st.sampled_from(ALL_ALGOS))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    depth = draw(st.sampled_from((1, 2, 4)))
+    every = draw(st.sampled_from((1, 2, 3)))
+    return name, seed, depth, every
+
+
+@settings(max_examples=6, deadline=None)
+@given(case=resume_cases())
+def test_resume_equivalence_fuzz(case, tmp_path_factory):
+    name, seed, depth, every = case
+    rng = np.random.default_rng(seed)
+    n_v = int(rng.integers(16, 200))
+    e = rng.integers(0, n_v, (int(rng.integers(600, 3000)), 2))
+    e = e[e[:, 0] != e[:, 1]].astype(np.int32)
+    if not len(e):
+        return
+    stream = InMemoryEdgeStream(e, num_vertices=n_v)
+    spec = spec_for(name, chunk_size=_CHUNKS[name], pipeline_depth=depth)
+    clean = run_spec(spec, stream, 4)
+    d = str(tmp_path_factory.mktemp("resume") / "ck")
+    run_spec(spec, stream, 4, checkpoint_every_chunks=every,
+             checkpoint_dir=d)
+    if latest_checkpoint(d) is None:
+        return                        # run shorter than one interval
+    res = run_spec(spec, stream, 4, resume_from=d)
+    np.testing.assert_array_equal(
+        np.asarray(clean.assignment), np.asarray(res.assignment),
+        err_msg=f"{name} seed={seed} depth={depth} every={every}")
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity (manifest format v4)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def saved_artifact(seed_graph, stream, tmp_path):
+    res = run_spec(spec_for("2psl", chunk_size=512), stream, 8)
+    d = str(tmp_path / "art")
+    art = PartitionArtifact.save(d, res, num_vertices=stream.num_vertices,
+                                 num_edges=stream.num_edges,
+                                 edges=seed_graph, host_groups=2)
+    return d, art
+
+
+def test_artifact_v4_checksums_all_sidecars(saved_artifact):
+    d, art = saved_artifact
+    assert art.manifest["format_version"] == 4
+    files = art.manifest["integrity"]["files"]
+    assert set(files) == {"assignment.bin", "halo_plan.npz",
+                          "host_plan.npz"}
+    assert all(v.startswith("sha256:") for v in files.values())
+    assert not glob.glob(os.path.join(d, "*.tmp*"))
+    reloaded = PartitionArtifact.load(d)          # verifies by default
+    np.testing.assert_array_equal(np.asarray(reloaded.assignment),
+                                  np.asarray(art.assignment))
+
+
+@pytest.mark.parametrize("victim", ["assignment.bin", "halo_plan.npz",
+                                    "host_plan.npz"])
+def test_artifact_load_rejects_bit_flip(saved_artifact, victim):
+    d, _ = saved_artifact
+    p = os.path.join(d, victim)
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ArtifactIntegrityError, match=victim):
+        PartitionArtifact.load(d)
+    PartitionArtifact.load(d, verify=False)       # explicit bypass
+
+
+def test_artifact_load_rejects_missing_sidecar(saved_artifact):
+    d, _ = saved_artifact
+    os.remove(os.path.join(d, "halo_plan.npz"))
+    with pytest.raises(ArtifactIntegrityError, match="missing"):
+        PartitionArtifact.load(d)
+
+
+def test_artifact_pre_v4_loads_without_verification(saved_artifact):
+    import json
+    d, art = saved_artifact
+    manifest = dict(art.manifest)
+    manifest.pop("integrity")
+    manifest["format_version"] = 3
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # corrupt a sidecar: a v3 manifest has no checksums, so load succeeds
+    with open(os.path.join(d, "halo_plan.npz"), "ab") as f:
+        f.write(b"x")
+    assert PartitionArtifact.load(d).manifest["format_version"] == 3
+
+
+def test_register_local_graphs_extends_integrity(saved_artifact, stream):
+    from repro.sample import build_local_graphs
+    d, art = saved_artifact
+    build_local_graphs(art, stream)
+    reloaded = PartitionArtifact.load(d)          # checksums still valid
+    files = reloaded.manifest["integrity"]["files"]
+    assert any(f.startswith("local_csc_p") for f in files)
+    victim = next(f for f in files if f.startswith("local_csc_p"))
+    with open(os.path.join(d, victim), "ab") as f:
+        f.write(b"x")
+    with pytest.raises(ArtifactIntegrityError, match=victim):
+        PartitionArtifact.load(d)
+
+
+# ---------------------------------------------------------------------------
+# degraded feature serving
+# ---------------------------------------------------------------------------
+
+def _store(feat):
+    def fetch(gids):
+        return feat[gids]
+    return fetch
+
+
+def test_resilient_fetcher_passthrough_bit_identical():
+    feat = np.random.default_rng(0).normal(size=(64, 4)).astype(np.float32)
+    f = ResilientFetcher(_store(feat), 4, policy=_NO_SLEEP)
+    gids = np.array([3, 9, 11])
+    np.testing.assert_array_equal(f(gids), feat[gids])
+    assert f.failures == 0
+
+
+def test_resilient_fetcher_retries_transient_fault():
+    feat = np.random.default_rng(0).normal(size=(64, 4)).astype(np.float32)
+    calls = {"n": 0}
+
+    def flaky(gids):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise IOError("shard down")
+        return feat[gids]
+
+    f = ResilientFetcher(flaky, 4, policy=_NO_SLEEP)
+    np.testing.assert_array_equal(f(np.array([5, 6])), feat[[5, 6]])
+    assert f.retries == 2 and f.failures == 0
+
+
+def test_resilient_fetcher_degrades_on_exhaustion():
+    def dead(gids):
+        raise IOError("shard gone")
+
+    f = ResilientFetcher(dead, 4, policy=RetryPolicy(max_retries=1,
+                                                     backoff_base_s=0.0))
+    rows = f(np.array([1, 2, 3]))
+    np.testing.assert_array_equal(rows, np.zeros((3, 4), np.float32))
+    assert f.failures == 3
+    assert f.stats()["failures"] == 3
+
+
+def test_resilient_fetcher_times_out_hung_fetch():
+    def hung(gids):
+        time.sleep(2.0)
+
+    f = ResilientFetcher(hung, 2, timeout_s=0.05,
+                         policy=RetryPolicy(max_retries=0))
+    t0 = time.perf_counter()
+    rows = f(np.array([0]))
+    assert time.perf_counter() - t0 < 5.0
+    np.testing.assert_array_equal(rows, np.zeros((1, 2), np.float32))
+    assert f.failures == 1
+
+
+def test_resilient_fetcher_rejects_wrong_shape():
+    def skewed(gids):
+        return np.zeros((len(gids), 7), np.float32)
+
+    f = ResilientFetcher(skewed, 4, policy=RetryPolicy(max_retries=0))
+    rows = f(np.array([0, 1]))
+    np.testing.assert_array_equal(rows, np.zeros((2, 4), np.float32))
+    assert f.failures == 2
+
+
+def test_serve_gnn_degrades_instead_of_crashing(seed_graph, stream,
+                                                tmp_path):
+    from repro.launch.serve import serve_gnn
+    from repro.sample import build_local_graphs
+    res = run_spec(spec_for("2psl", chunk_size=512), stream, 4)
+    d = str(tmp_path / "art")
+    art = PartitionArtifact.save(d, res, num_vertices=stream.num_vertices,
+                                 num_edges=stream.num_edges,
+                                 edges=seed_graph)
+    build_local_graphs(art, stream)
+    logits0, rep0 = serve_gnn(d, n_requests=3, fanouts=(2, 2))
+    assert rep0["fetch_failures"] == 0
+    # transient: fewer faults than retries -> bit-identical answers
+    logits1, rep1 = serve_gnn(d, n_requests=3, fanouts=(2, 2),
+                              inject_fetch_faults=2, fetch_retries=3)
+    np.testing.assert_array_equal(logits0, logits1)
+    assert rep1["fetch_retries"] >= 2 and rep1["fetch_failures"] == 0
+    # permanent: the loop survives and reports degraded rows
+    _, rep2 = serve_gnn(d, n_requests=3, fanouts=(2, 2),
+                        inject_fetch_faults=10 ** 6, fetch_retries=1)
+    assert rep2["fetch_failures"] > 0

@@ -131,16 +131,17 @@ def test_artifact_v3_and_v2_compat(tmp_path):
     assert len(graphs) == 4
 
     art2 = PartitionArtifact.load(art.path)
-    assert art2.manifest["format_version"] == 3
+    assert art2.manifest["format_version"] == 4
     assert art2.has_local_graphs()
     g0 = art2.local_graph(0)
     assert g0.num_edges == int((np.asarray(art2.assignment) == 0).sum())
     assert load_local_graph(art2.path, 1).part_id == 1
 
-    # a v2 manifest (no local_graphs block) still loads and reports no
-    # local structure — v2 readers of v3 manifests only gained a key
+    # a v2 manifest (no local_graphs / integrity blocks) still loads and
+    # reports no local structure — later formats only gained keys
     man = dict(art2.manifest)
     man.pop("local_graphs")
+    man.pop("integrity")
     man["format_version"] = 2
     v2dir = str(tmp_path / "v2")
     os.makedirs(v2dir)
