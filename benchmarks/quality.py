@@ -1,0 +1,128 @@
+"""Partition quality per registered spec at pinned seeds (paper §IV axis).
+
+One row per (graph, algorithm): replication factor, balance, and the
+family's own extras (HEP's resident-budget numbers, buffered's window
+count).  The algorithm list is the spec registry — a newly registered
+family shows up in the next regeneration with zero edits here.
+
+Results merge into ``BENCH_engine.json`` under a ``quality`` key (the
+engine-throughput rows are left untouched); ``summary`` carries the two
+cross-family claims the test suite pins (buffered/2psl RF ratio <= 1,
+HEP resident bytes <= budget).
+
+    PYTHONPATH=src python -m benchmarks.quality [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import InMemoryEdgeStream, SPEC_REGISTRY, run_spec, spec_for
+from repro.data import rmat_graph
+
+SCHEMA_VERSION = 1
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+
+#: pinned evaluation configs: (name, scale, edge_factor, seed, k,
+#: chunk_size, buffer_edges, memory_budget_bytes) — the same seeds the
+#: quality-regression tests assert against
+CONFIGS = [
+    ("rmat13-ef8-s11", 13, 8, 11, 8, 4096, 16384, 1 << 16),
+    ("rmat12-ef8-s7", 12, 8, 7, 32, 2048, 8192, 1 << 16),
+]
+SMOKE_CONFIGS = [
+    ("rmat10-ef8-s7", 10, 8, 7, 8, 1024, 2048, 1 << 14),
+]
+
+#: per-family extras lifted into the row verbatim when present
+_EXTRA_KEYS = ("hot_vertices", "hot_state_bytes", "memory_budget_bytes",
+               "buffer_edges", "window_chunks", "windows")
+
+
+def _spec(name, cs, be, budget):
+    overrides = {"chunk_size": cs}
+    if name == "buffered":
+        overrides["buffer_edges"] = be
+    elif name == "hep":
+        overrides["memory_budget_bytes"] = budget
+    return spec_for(name, **overrides)
+
+
+def bench_quality(configs):
+    graphs, results = [], []
+    for gname, scale, ef, seed, k, cs, be, budget in configs:
+        edges = rmat_graph(scale, edge_factor=ef, seed=seed)
+        stream = InMemoryEdgeStream(np.asarray(edges, np.int64))
+        graphs.append({"name": gname, "scale": scale, "edge_factor": ef,
+                       "seed": seed, "edges": stream.num_edges,
+                       "vertices": stream.num_vertices, "k": k})
+        for name in sorted(SPEC_REGISTRY):
+            res = run_spec(_spec(name, cs, be, budget), stream, k)
+            row = {
+                "graph": gname, "algorithm": name, "k": k,
+                "replication_factor":
+                    round(res.quality.replication_factor, 6),
+                "balance": round(res.quality.balance, 6),
+                "max_partition": int(res.quality.max_partition),
+            }
+            row.update({key: res.extras[key] for key in _EXTRA_KEYS
+                        if key in res.extras})
+            results.append(row)
+    return graphs, results
+
+
+def summarize(results):
+    rf = {(r["graph"], r["algorithm"]): r["replication_factor"]
+          for r in results}
+    ratios = {g: round(rf[(g, "buffered")] / rf[(g, "2psl")], 4)
+              for g, _ in {(r["graph"], None) for r in results}}
+    hep = {r["graph"]: {"hot_state_bytes": r["hot_state_bytes"],
+                        "memory_budget_bytes": r["memory_budget_bytes"],
+                        "within_budget": r["hot_state_bytes"]
+                        <= r["memory_budget_bytes"]}
+           for r in results if r["algorithm"] == "hep"}
+    return {"buffered_vs_2psl_rf_ratio": ratios, "hep_budget": hep}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph (CI schema check)")
+    args = ap.parse_args(argv)
+
+    graphs, results = bench_quality(SMOKE_CONFIGS if args.smoke
+                                    else CONFIGS)
+    section = {
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": int(time.time()),
+        "graphs": graphs,
+        "results": results,
+        "summary": summarize(results),
+    }
+    # merge, never overwrite: other sections own the rest of the file
+    doc = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            doc = json.load(f)
+    doc["quality"] = section
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote quality section -> {args.out}")
+    for r in results:
+        print(f"  {r['graph']:16s} {r['algorithm']:10s} "
+              f"rf {r['replication_factor']:>8.4f} "
+              f"balance {r['balance']:.4f}")
+    for g, ratio in section["summary"]["buffered_vs_2psl_rf_ratio"].items():
+        print(f"  {g}: buffered/2psl rf ratio {ratio}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,33 @@ print(f"bench smoke OK: geomean {s['geomean_best_speedup']}x over the "
       f"synchronous engine (tiny graph — schema check, not a perf gate)")
 PY
 
+# ---- quality-smoke stage: RF per registered spec on a tiny pinned graph,
+# then validate the BENCH_engine.json quality-section schema -------------
+python -m benchmarks.quality --smoke \
+    --out "$smoke_dir/BENCH_engine.json" > /dev/null
+python - "$smoke_dir" <<'PY'
+import json, sys
+from repro.core import SPEC_REGISTRY
+doc = json.load(open(sys.argv[1] + "/BENCH_engine.json"))
+assert "results" in doc, "quality merges into the engine doc, not over it"
+q = doc["quality"]
+assert q["schema_version"] >= 1
+assert q["graphs"] and q["results"]
+algos = {r["algorithm"] for r in q["results"]}
+assert algos == set(SPEC_REGISTRY), \
+    f"quality rows must cover the registry: {sorted(algos)}"
+for r in q["results"]:
+    assert r["replication_factor"] >= 1.0 and r["balance"] >= 1.0
+s = q["summary"]
+for g, ratio in s["buffered_vs_2psl_rf_ratio"].items():
+    assert ratio <= 1.0, f"buffered lost to 2psl on {g}: {ratio}"
+for g, h in s["hep_budget"].items():
+    assert h["within_budget"], f"hep over budget on {g}: {h}"
+print(f"quality smoke OK: {len(q['results'])} rows over "
+      f"{len(algos)} specs; buffered/2psl ratios "
+      f"{list(s['buffered_vs_2psl_rf_ratio'].values())}")
+PY
+
 # ---- serve-smoke stage: lower the artifact into per-partition serving
 # structure (--local-graphs, artifact format v3), sample ego-networks, and
 # answer GNN inference through serve_gnn with the hot-vertex cache — the

@@ -15,12 +15,12 @@ from .mapping import map_clusters_lpt, map_clusters_lpt_jax
 from .metrics import (PartitionQuality, capacity, cross_host_replicas,
                       cross_host_replication_factor, host_assignment,
                       quality_from_assignment, quality_from_bitmatrix)
-from .pipeline import (PARTITIONERS, run_2ps_hdrf, run_2psl, run_dbh,
-                       run_greedy, run_grid, run_hdrf, run_partitioner,
-                       run_random)
-from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, SpecError,
-                    SPEC_REGISTRY, StatelessSpec, TwoPSLSpec, spec_for,
-                    spec_from_dict)
+from .pipeline import (PARTITIONERS, run_2ps_hdrf, run_2psl, run_buffered,
+                       run_dbh, run_greedy, run_grid, run_hdrf, run_hep,
+                       run_partitioner, run_random)
+from .specs import (BufferedSpec, DBHSpec, HDRFSpec, HEPSpec,
+                    PartitionerSpec, SpecError, SPEC_REGISTRY,
+                    StatelessSpec, TwoPSLSpec, spec_for, spec_from_dict)
 from .stream import (BYTES_PER_EDGE, EdgeStream, InMemoryEdgeStream,
                      MemmapEdgeStream, ThrottledEdgeStream, compute_degrees)
 
@@ -31,13 +31,15 @@ __all__ = [
     "quality_from_assignment", "quality_from_bitmatrix",
     "cross_host_replicas", "cross_host_replication_factor",
     "host_assignment", "PARTITIONERS",
-    "PartitionRunResult", "run_2ps_hdrf", "run_2psl", "run_dbh",
-    "run_greedy", "run_grid",
-    "run_hdrf", "run_partitioner", "run_random", "BYTES_PER_EDGE",
+    "PartitionRunResult", "run_2ps_hdrf", "run_2psl", "run_buffered",
+    "run_dbh", "run_greedy", "run_grid",
+    "run_hdrf", "run_hep", "run_partitioner", "run_random",
+    "BYTES_PER_EDGE",
     "EdgeStream", "InMemoryEdgeStream", "MemmapEdgeStream",
     "ThrottledEdgeStream", "compute_degrees",
     # spec / engine / artifact API
     "PartitionerSpec", "TwoPSLSpec", "HDRFSpec", "DBHSpec", "StatelessSpec",
+    "HEPSpec", "BufferedSpec",
     "SpecError", "SPEC_REGISTRY", "spec_for", "spec_from_dict",
     "StreamingPartitioner", "StreamPass", "build_partitioner", "run_spec",
     "PartitionArtifact", "compute_degrees_streaming",

@@ -1,0 +1,334 @@
+"""Buffered re-streaming partitioner (arXiv:2402.11980-style).
+
+Pure streaming partitioners decide each edge with whatever state they have
+accumulated so far; buffered streaming trades a bounded edge buffer for
+quality above that: accumulate a window of ``buffer_edges`` edges, build
+the window's mini-graph IN MEMORY, and only then assign the batch — so
+every decision inside the window can see the window's full structure, not
+a prefix of it.
+
+Mechanically each window is 2PS-L in miniature, exploiting three things
+streaming cannot do:
+
+* the window's vertex ids are compacted (``np.unique``) and its
+  undirected adjacency built with ``repro.sample.local_graph.
+  build_adjacency`` — the one CSR builder the serving stack uses — then a
+  volume-capped BFS from high-degree seeds clusters the mini-graph (the
+  in-memory stand-in for 2PS-L's streaming clustering);
+* window clusters map onto partitions by replica AFFINITY against the
+  global bit matrix under a slot-capacity guard (``map_window_clusters``)
+  — the re-streaming step proper: later windows re-place recurring
+  vertices where their replicas already live instead of re-balancing from
+  scratch;
+* window edges are REORDERED cluster-by-cluster (descending cluster
+  volume) before dispatch — the buffer is in memory, so processing order
+  is free — and the batch then runs 2PS-L's two phases as sequential
+  sub-batch scans: pre-partition edges whose window clusters agree
+  (``_prepartition_core``), folding replicas after every sub-batch, then
+  two-candidate score the rest (``_twopsl_choose``) against replication
+  state that already includes EVERY window pre-partition — exactly the
+  pass structure that makes 2PS-L's scoring effective, but per window.
+  The shared admission tail (``_admit_with_fallback``) keeps the hard
+  alpha cap exact.
+
+The engine regroups the stream into windows of
+``window_chunks * chunk_size`` edges (``StreamPass.window``), and the
+existing depth-N pipeline prefetches the NEXT window's buffer fill while
+the current window is clustered and scored.
+
+All streaming state (global bit matrix, sizes, degrees, the window
+tables) lives in the flat device-state dict, so the engine's generic
+chunk-boundary checkpointing covers it; checkpoints land at window
+boundaries (the window is the pass's atomic unit — mid-window state never
+exists between ``chunk_fn`` calls), and stale window tables in a snapshot
+are harmless because the next window overwrites them before reading.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops, partitioning as P
+from .engine import (StreamingPartitioner, StreamPass,
+                     compute_degrees_streaming)
+from .metrics import capacity, host_assignment
+from .scoring import resolve_scoring_backend
+from .specs import BufferedSpec
+
+#: target edges per sequential sub-batch inside a window — small enough
+#: that later sub-batches see earlier replicas, large enough to stay
+#: vectorized (the scan length is window/sub, a static shape per spec)
+SUB_BATCH_TARGET = 1024
+
+
+class WindowClustering(NamedTuple):
+    """One window's mini-graph clustering (all aligned with ``uniq``)."""
+    uniq: np.ndarray      # (n_local,) sorted global vertex ids
+    labels: np.ndarray    # (n_local,) vertex -> cluster label
+    vols: np.ndarray      # (C,) cluster volume (sum of mini-graph degrees)
+    deg: np.ndarray       # (n_local,) mini-graph degree
+    elabels: np.ndarray   # (n_edges, 2) per-edge endpoint cluster labels
+
+
+def window_clusters(edges: np.ndarray, *, k: int,
+                    max_vol_factor: float = 1.0) -> WindowClustering:
+    """Cluster one buffered window's mini-graph.
+
+    Compacts the window's vertex ids, builds the undirected adjacency
+    (both orientations through ``build_adjacency``), and grows
+    volume-capped clusters by BFS from seeds in descending mini-graph
+    degree — deterministic (stable sorts, stream-order adjacency), like
+    everything in the engine.  The volume cap mirrors 2PS-L's
+    ``default_max_vol``: ``max_vol_factor * 2|E_w| / k`` over the
+    window's own edge count.
+    """
+    from ..sample.local_graph import build_adjacency
+
+    edges = np.asarray(edges)
+    uniq, inv = np.unique(edges.reshape(-1), return_inverse=True)
+    inv = inv.reshape(-1, 2)
+    n_local = len(uniq)
+    mini = inv.astype(np.int64)
+    und = np.concatenate([mini, mini[:, ::-1]], axis=0)
+    indptr, order = build_adjacency(und, n_local, by="src")
+    nbr = und[order, 1]
+    deg = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    max_vol = max(int(max_vol_factor * 2.0 * len(edges) / max(k, 1)), 1)
+
+    labels = np.full(n_local, -1, np.int64)
+    vols: list[int] = []
+    for s in np.argsort(-deg, kind="stable"):
+        if labels[s] >= 0:
+            continue
+        c = len(vols)
+        labels[s] = c
+        vol = int(deg[s])
+        q = deque([int(s)])
+        while q and vol < max_vol:
+            x = q.popleft()
+            for y in nbr[indptr[x]:indptr[x + 1]]:
+                if labels[y] < 0 and vol + int(deg[y]) <= max_vol:
+                    labels[y] = c
+                    vol += int(deg[y])
+                    q.append(int(y))
+        vols.append(vol)
+    labels = labels.astype(np.int32)
+    return WindowClustering(uniq=uniq.astype(np.int64), labels=labels,
+                            vols=np.asarray(vols, np.int64), deg=deg,
+                            elabels=labels[inv])
+
+
+def map_window_clusters(affinity: np.ndarray, vols: np.ndarray, k: int, *,
+                        init_loads: np.ndarray,
+                        cap_slots: int) -> np.ndarray:
+    """Replica-affinity-aware cluster -> partition mapping.
+
+    This is re-streaming's edge over one-shot LPT: a window cluster's
+    vertices usually already replicate somewhere (earlier windows placed
+    them), and mapping the cluster onto the partition holding the most of
+    that replication keeps recurring vertices together ACROSS windows —
+    plain per-window LPT balances volumes but scatters repeat vertices.
+
+    Clusters are visited in descending volume (LPT order); each takes the
+    partition with the highest ``affinity[c, p]`` among those whose
+    running endpoint-slot load stays under ``cap_slots`` (ties: lighter
+    load, then lower id — all deterministic).  A cluster that fits
+    nowhere falls back to the least-loaded partition; the engine's
+    per-edge capacity admission still enforces the hard alpha cap.  The
+    first window has all-zero affinity, where this degenerates to classic
+    LPT exactly.
+    """
+    num_c = len(vols)
+    c2p = np.zeros(num_c, np.int32)
+    loads = np.asarray(init_loads, np.int64).copy()
+    pids = np.arange(k)
+    for c in np.argsort(-np.asarray(vols), kind="stable"):
+        fits = loads + vols[c] <= cap_slots
+        cand = pids[fits] if fits.any() else pids
+        a = affinity[c]
+        # primary: max affinity; then min load; then lowest partition id
+        best = cand[np.lexsort((cand, loads[cand], -a[cand]))[0]]
+        c2p[c] = best
+        loads[best] += int(vols[c])
+    return c2p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "backend", "sub", "eff"),
+                   donate_argnums=(0, 1))
+def _buffered_window(bits, sizes, d, v2c, c2p, vol, edges, valid, scatter,
+                     *, k, cap, backend, sub, eff):
+    """Assign one whole window: 2PS-L's two phases as sequential sub-batch
+    scans, then scatter the assignments back to stream order.
+
+    ``edges``/``valid`` arrive cluster-ordered and padded to a multiple
+    of ``sub``; ``scatter`` maps each row back to its stream position in
+    the (eff,) output (padding rows carry an out-of-range sentinel and
+    are dropped).  Phase 1 pre-partitions cluster-coherent edges,
+    folding replicas after every sub-batch; phase 2's two-candidate
+    scoring therefore sees the replica state of the ENTIRE window's
+    pre-partitioning — the same pass structure that makes full 2PS-L's
+    scoring effective, in miniature."""
+    S = edges.shape[0] // sub
+    e_s = edges.reshape(S, sub, 2)
+    m_s = valid.reshape(S, sub)
+
+    def pre_body(carry, inp):
+        bits, sizes = carry
+        e, m = inp
+        sizes, asg, _ = P._prepartition_core(sizes, d, v2c, c2p, e, m,
+                                             k=k, cap=cap)
+        bits = P._apply_bits(bits, e, asg)
+        return (bits, sizes), asg
+
+    (bits, sizes), asg1 = jax.lax.scan(pre_body, (bits, sizes), (e_s, m_s))
+
+    def score_body(carry, inp):
+        bits, sizes = carry
+        e, m, a1 = inp
+        todo, chosen, du, dv, u, v = P._twopsl_choose(
+            bits, d, vol, v2c, c2p, e, m, backend=backend)
+        asg2, sizes = P._admit_with_fallback(sizes, chosen, todo,
+                                             du, dv, u, v, k, cap)
+        bits = P._apply_bits(bits, e, asg2)
+        return (bits, sizes), jnp.where(a1 >= 0, a1, asg2)
+
+    (bits, sizes), asg = jax.lax.scan(score_body, (bits, sizes),
+                                      (e_s, m_s, asg1))
+    out = jnp.full((eff,), -1, jnp.int32).at[scatter].set(
+        asg.reshape(-1), mode="drop")
+    return bits, sizes, out
+
+
+class _BufferedPartitioner(StreamingPartitioner):
+    def __init__(self, spec: BufferedSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+        self.backend = resolve_scoring_backend(spec.scoring_backend)
+        self.window = spec.window_chunks
+
+    def _setup_run(self, stream, k):
+        self.k = k
+        self.cap = capacity(stream.num_edges, k, self.spec.alpha)
+        self._num_edges = stream.num_edges
+        self._init_hierarchy(k)
+        if self.num_hosts:
+            self._host_of_np = host_assignment(k, self.num_hosts)
+        self._eff = self.spec.chunk_size * self.window
+        # fixed table padding: a window of W edges touches <= 2W vertices,
+        # hence <= 2W clusters — one static shape, zero jit recompiles
+        self._cpad = 2 * self._eff
+        # sub-batch geometry: S sequential sub-batches of `sub` edges,
+        # padded; derived from the spec alone so resume matches exactly
+        self._subs = max(1, -(-self._eff // SUB_BATCH_TARGET))
+        self._sub = -(-self._eff // self._subs)
+        self._windows = 0
+
+    def init_state(self, stream, k, timer, degrees):
+        sp = self.spec
+        self._setup_run(stream, k)
+        if degrees is None:
+            degrees = compute_degrees_streaming(
+                stream, sp.chunk_size, readahead=sp.pipeline_depth - 1)
+        timer.lap("degrees")
+        return {
+            "bits": bitops.alloc_jnp(stream.num_vertices, k),
+            "sizes": jnp.zeros((k,), jnp.int32),
+            "d": jnp.asarray(degrees, jnp.int32),
+            # window tables, rewritten before every window's dispatch —
+            # they live in the state dict so checkpoints stay a flat
+            # array snapshot (stale contents are never read)
+            "wv2c": jnp.zeros((stream.num_vertices,), jnp.int32),
+            "wc2p": jnp.zeros((self._cpad,), jnp.int32),
+            "wvol": jnp.zeros((self._cpad,), jnp.int32),
+        }
+
+    def passes(self):
+        return [StreamPass("buffered", self._window_fn,
+                           window=self.window)]
+
+    def _window_fn(self, st, pc):
+        sp = self.spec
+        n = pc.n
+        e = np.ascontiguousarray(pc.host[:n])
+        wc = window_clusters(e, k=self.k, max_vol_factor=sp.max_vol_factor)
+
+        # degree-weighted replica affinity of each window cluster with
+        # each partition: one device gather of the window vertices' rows
+        # of the global replication matrix (O(window) bytes, never O(V))
+        rows = np.asarray(jnp.take(st["bits"], jnp.asarray(wc.uniq),
+                                   axis=0))
+        rep = bitops.get_np(rows, np.arange(len(wc.uniq))[:, None],
+                            np.arange(self.k)[None, :])
+        aff = np.zeros((len(wc.vols), self.k), np.int64)
+        np.add.at(aff, wc.labels, rep * wc.deg[:, None])
+        # seed loads with the run's sizes so far (x2: volume counts
+        # endpoint slots, sizes count edges); the slot cap keeps the
+        # affinity chase from oversubscribing any partition
+        sizes_np = np.asarray(st["sizes"]).astype(np.int64)
+        cap_slots = int(sp.alpha * 2.0
+                        * (int(sizes_np.sum()) + n) / self.k) + 1
+        c2p = map_window_clusters(aff, wc.vols, self.k,
+                                  init_loads=2 * sizes_np,
+                                  cap_slots=cap_slots)
+
+        # cluster-coherent processing order: the buffer is in memory, so
+        # reorder edges by their dominant (larger-volume) cluster, big
+        # clusters first — each cluster's edges then stream contiguously
+        # and later sub-batches score against its accumulated replicas
+        cu, cv = wc.elabels[:, 0], wc.elabels[:, 1]
+        dom = np.where(wc.vols[cu] >= wc.vols[cv], cu, cv)
+        crank = np.empty(len(wc.vols), np.int64)
+        crank[np.argsort(-wc.vols, kind="stable")] = np.arange(len(wc.vols))
+        order = np.argsort(crank[dom], kind="stable")
+
+        padded = self._subs * self._sub
+        e_ord = np.zeros((padded, 2), e.dtype)
+        e_ord[:n] = e[order]
+        valid_ord = np.zeros(padded, bool)
+        valid_ord[:n] = True
+        scatter = np.full(padded, self._eff, np.int32)   # sentinel: drop
+        scatter[:n] = order
+
+        cpad = self._cpad
+        uniq_pad = np.full(cpad, np.iinfo(np.int32).max, np.int64)
+        uniq_pad[:len(wc.uniq)] = wc.uniq
+        labels_pad = np.zeros(cpad, np.int32)
+        labels_pad[:len(wc.labels)] = wc.labels
+        c2p_pad = np.zeros(cpad, np.int32)
+        c2p_pad[:len(c2p)] = c2p
+        vol_pad = np.zeros(cpad, np.int32)
+        vol_pad[:len(wc.vols)] = np.minimum(wc.vols,
+                                            np.iinfo(np.int32).max)
+
+        wv2c = st["wv2c"].at[jnp.asarray(uniq_pad)].set(
+            jnp.asarray(labels_pad), mode="drop")
+        wc2p = jnp.asarray(c2p_pad)
+        wvol = jnp.asarray(vol_pad)
+        bits, sizes, asg = _buffered_window(
+            st["bits"], st["sizes"], st["d"], wv2c, wc2p, wvol,
+            jnp.asarray(e_ord), jnp.asarray(valid_ord),
+            jnp.asarray(scatter), k=self.k, cap=self.cap,
+            backend=self.backend, sub=self._sub, eff=self._eff)
+        self._windows += 1
+        return {**st, "bits": bits, "sizes": sizes, "wv2c": wv2c,
+                "wc2p": wc2p, "wvol": wvol}, asg
+
+    def finalize(self, state, pass_counts):
+        extras = {
+            "buffer_edges": self._eff,
+            "window_chunks": self.window,
+            "windows": self._windows,
+        }
+        return state["bits"], state["sizes"], extras
+
+    # -- checkpoint / resume --------------------------------------------
+    # everything lives in the device state; window geometry re-derives
+    # from the spec, so resume needs no stream sweeps at all
+    def init_for_resume(self, stream, k, timer):
+        self._setup_run(stream, k)

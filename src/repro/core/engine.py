@@ -81,8 +81,8 @@ from .metrics import (PartitionQuality, capacity,
                       cross_host_replication_factor, host_assignment,
                       quality_from_bitmatrix)
 from .scoring import resolve_scoring_backend
-from .specs import (DBHSpec, HDRFSpec, PartitionerSpec, SpecError,
-                    StatelessSpec, TwoPSLSpec)
+from .specs import (BufferedSpec, DBHSpec, HDRFSpec, HEPSpec,
+                    PartitionerSpec, SpecError, StatelessSpec, TwoPSLSpec)
 from .stream import EdgeStream, prefetch
 
 
@@ -197,6 +197,13 @@ class StreamPass:
     #: writeback-stage hook: (chunk (n,2) np, asg (n,) np) -> None.  Runs
     #: off the critical path, overlapped with later chunks' dispatch.
     host_fold: Callable[[np.ndarray, np.ndarray], None] | None = None
+    #: chunk regrouping factor: the engine feeds this pass windows of
+    #: ``window * spec.chunk_size`` edges per ``chunk_fn`` call (buffered
+    #: re-streaming's edge buffer).  The pipeline, writeback, and
+    #: checkpoint cursor all count these regrouped windows, so checkpoints
+    #: land exactly at window boundaries — a window is the pass's atomic
+    #: unit of work.
+    window: int = 1
 
 
 class StreamingPartitioner:
@@ -257,6 +264,16 @@ class StreamingPartitioner:
         prologues override to skip them."""
         self.init_state(stream, k, timer, None)
 
+    def replication_state_bytes(self) -> int | None:
+        """Bytes of replication state this partitioner keeps resident for
+        its scoring decisions.  ``None`` (the default) means the full
+        O(|V| * k) packed bit matrix — the engine then reports the
+        finalized matrix's size on the ``engine.replication_state_bytes``
+        gauge.  Budgeted partitioners (HEP) override so the gauge reflects
+        their pinned footprint, which tests and benchmarks bound against
+        ``memory_budget_bytes``."""
+        return None
+
 
 # ---------------------------------------------------------------------------
 # 2PS-L / 2PS-HDRF
@@ -292,7 +309,11 @@ class _TwoPSLPartitioner(StreamingPartitioner):
                                         readahead=sp.pipeline_depth - 1)
         timer.lap("clustering")
         with get_tracer().span("mapping", cat="engine"):
-            c2p, part_vol = map_clusters_lpt(clus.vol, k)
+            # host-aware LPT only when the penalty is live: host_groups
+            # alone (or dcn_penalty=0) must stay bit-identical to flat
+            c2p, part_vol = map_clusters_lpt(
+                clus.vol, k,
+                host_of=self._host_of_np if self.hosted else None)
         timer.lap("mapping")
         self._clus, self._part_vol = clus, part_vol
         # pre-partitioning only WRITES replication state -> fold it on the
@@ -567,6 +588,12 @@ def build_partitioner(spec: PartitionerSpec) -> StreamingPartitioner:
     if isinstance(spec, StatelessSpec):
         return (_GridPartitioner if spec.variant == "grid"
                 else _RandomPartitioner)(spec)
+    if isinstance(spec, HEPSpec):
+        from .hybrid import _HEPPartitioner          # lazy: avoids a cycle
+        return _HEPPartitioner(spec)
+    if isinstance(spec, BufferedSpec):
+        from .buffered import _BufferedPartitioner   # lazy: avoids a cycle
+        return _BufferedPartitioner(spec)
     raise TypeError(f"no streaming partitioner for {type(spec).__name__}")
 
 
@@ -802,11 +829,17 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
             if limit and checkpoints_written >= limit:
                 os._exit(137)
 
+        # buffered re-streaming regroups the stream into windows of
+        # ``window`` engine chunks; every cursor below (checkpointing
+        # included) counts these regrouped units, so a resumed run —
+        # whose window size derives from the same spec — replays from
+        # the identical boundary
+        eff_chunk = spec.chunk_size * max(1, int(sp.window))
         # wrap the raw iterator (prefetch-stage attribution in the
         # producer thread), then apply the engine's bounded readahead —
         # identical chunk sequence to stream.iter_chunks_prefetch
         it = prefetch(_traced_chunks(
-                          stream.iter_chunks_from(spec.chunk_size,
+                          stream.iter_chunks_from(eff_chunk,
                                                   first_chunk),
                           tracer, stall, start=first_chunk),
                       readahead=depth - 1)
@@ -823,7 +856,7 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
                     if chunk is _STREAM_END:
                         break
                     td = time.perf_counter()
-                    pc = P.pad_chunk(chunk, spec.chunk_size)
+                    pc = P.pad_chunk(chunk, eff_chunk)
                     state, asg = sp.chunk_fn(state, pc)
                     dt = time.perf_counter() - td
                     tracer.complete("dispatch", "dispatch", dt, chunk=ci)
@@ -866,7 +899,9 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
         quality = quality_from_bitmatrix(bits_np, sizes_np,
                                          stream.num_edges)
     timer.lap("finalize")
-    metrics.gauge("engine.replication_state_bytes").set(bits_np.nbytes)
+    resident = part.replication_state_bytes()
+    metrics.gauge("engine.replication_state_bytes").set(
+        bits_np.nbytes if resident is None else int(resident))
     if passes_wall > 0:
         metrics.gauge("engine.edges_per_sec").set(
             edges_ctr.value / passes_wall if metrics.enabled else 0.0)

@@ -1,0 +1,171 @@
+"""HEP-style hybrid partitioner (arXiv:2103.12594).
+
+The hybrid idea: almost all replication-state *value* concentrates in the
+few high-degree vertices of a power-law graph, so pin ONLY their state in
+memory and stream everything else statelessly.  Concretely:
+
+* the upfront degree pass (the same pipelined ``compute_degrees_streaming``
+  sweep 2PS-L and DBH run) ranks vertices by degree;
+* the top ``memory_budget_bytes // row_bytes`` vertices get a pinned row in
+  a compact packed bit matrix (``row_bytes = ceil(k/32) * 4`` — the packed
+  layout of ``repro.core.bitops``), a *budgeted* slice of the O(|V|*k)
+  state the stateful scorers carry for every vertex;
+* per chunk, edges with at least one pinned ("hot") endpoint are scored
+  in memory by NE-style replica affinity — a candidate partition scores by
+  how strongly the edge's hot endpoints are already attached to it, with
+  the lower-degree endpoint weighted up (its replicas are the expensive
+  ones to spread);
+* edges between two cold vertices fall back to degree-based hashing (DBH:
+  hash the lower-degree endpoint), which needs no per-vertex state at all;
+* every choice then runs the paper's shared admission tail
+  (``_admit_with_fallback``), so the hard balance cap
+  ``|p| <= ceil(alpha*|E|/k)`` holds exactly, like the 2PS-L family.
+
+The full V x k replication matrix still exists — but on the HOST, folded
+in the pipeline's writeback stage purely for end-of-run quality metrics
+(the same trick the stateless hash family uses); scoring decisions never
+read it.  The partitioner's resident scoring state is just the pinned
+rows, and ``replication_state_bytes`` reports exactly that footprint so
+the ``engine.replication_state_bytes`` gauge can be bounded against the
+budget in tests and benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops, partitioning as P
+from .engine import (StreamingPartitioner, StreamPass,
+                     compute_degrees_streaming)
+from .hashing import hash_mod_jnp
+from .metrics import capacity, host_assignment
+from .specs import HEPSpec
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1))
+def _hep_chunk(hbits, sizes, d, slot, edges, valid, *, k, cap):
+    """Score one chunk against the pinned hot-vertex state.
+
+    ``slot`` maps vertex -> pinned row (or -1 when cold).  Hot endpoints
+    contribute an NE-style affinity ``1 + (1 - deg/(deg_u+deg_v))`` to
+    every partition where they already replicate; edges with no hot
+    replica anywhere take the DBH hash.  Admission + overflow run the
+    shared capacity tail, and the chunk's assignments fold back into the
+    pinned rows (cold vertices have no row to fold)."""
+    u, v = edges[:, 0], edges[:, 1]
+    su, sv = slot[u], slot[v]
+    hot_u, hot_v = su >= 0, sv >= 0
+    du, dv = d[u], d[v]
+    parts = jnp.arange(k, dtype=jnp.int32)
+    rep_u = hot_u[:, None] & bitops.get_jnp(
+        hbits, jnp.clip(su, 0, None)[:, None], parts[None, :])
+    rep_v = hot_v[:, None] & bitops.get_jnp(
+        hbits, jnp.clip(sv, 0, None)[:, None], parts[None, :])
+    dsum = jnp.maximum((du + dv).astype(jnp.float32), 1.0)[:, None]
+    aff_u = jnp.where(rep_u, 2.0 - du.astype(jnp.float32)[:, None] / dsum,
+                      0.0)
+    aff_v = jnp.where(rep_v, 2.0 - dv.astype(jnp.float32)[:, None] / dsum,
+                      0.0)
+    scores = aff_u + aff_v
+    best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    smax = jnp.max(scores, axis=1)
+    # cold-cold edges (and hot edges with no replica yet) hash like DBH
+    lo = jnp.where(du <= dv, u, v)
+    fallback = hash_mod_jnp(lo.astype(jnp.uint32), k)
+    chosen = jnp.where(smax > 0.0, best, fallback)
+
+    assignment, sizes = P._admit_with_fallback(sizes, chosen, valid,
+                                               du, dv, u, v, k, cap)
+
+    ss = jnp.concatenate([su, sv])
+    pp = jnp.concatenate([assignment, assignment])
+    mm = jnp.concatenate([hot_u, hot_v]) & (pp >= 0)
+    hbits = bitops.set_jnp(hbits, jnp.clip(ss, 0, None),
+                           jnp.clip(pp, 0, None), mask=mm)
+    return hbits, sizes, assignment
+
+
+class _HEPPartitioner(StreamingPartitioner):
+    def __init__(self, spec: HEPSpec):
+        self.spec = spec
+        self.display_name = spec.display_name
+
+    def _setup_run(self, stream, k):
+        self.k = k
+        self.cap = capacity(stream.num_edges, k, self.spec.alpha)
+        self._init_hierarchy(k)
+        if self.num_hosts:
+            self._host_of_np = host_assignment(k, self.num_hosts)
+        row_bytes = bitops.num_words(k) * np.dtype(np.uint32).itemsize
+        # derived from (budget, k, |V|) alone — resume recomputes it
+        # without re-running the degree pass
+        self._n_hot = int(min(stream.num_vertices,
+                              self.spec.memory_budget_bytes // row_bytes))
+        self._row_bytes = row_bytes
+
+    def init_state(self, stream, k, timer, degrees):
+        sp = self.spec
+        self._setup_run(stream, k)
+        if degrees is None:
+            degrees = compute_degrees_streaming(
+                stream, sp.chunk_size, readahead=sp.pipeline_depth - 1)
+        timer.lap("degrees")
+        order = np.argsort(-np.asarray(degrees), kind="stable")
+        slot = np.full(stream.num_vertices, -1, np.int32)
+        slot[order[:self._n_hot]] = np.arange(self._n_hot, dtype=np.int32)
+        # metrics-only full matrix, host-folded off the critical path
+        self._bits_np = bitops.alloc_np(stream.num_vertices, k)
+        return {
+            # >= 1 row so the kernel shape is valid at budget 0; the
+            # dummy row is never read (no slot points at it)
+            "hbits": jnp.zeros((max(self._n_hot, 1),
+                                bitops.num_words(k)), jnp.uint32),
+            "sizes": jnp.zeros((k,), jnp.int32),
+            "d": jnp.asarray(degrees, jnp.int32),
+            "slot": jnp.asarray(slot),
+        }
+
+    def passes(self):
+        return [StreamPass("hybrid", self._chunk,
+                           host_fold=self._fold_bits_host)]
+
+    def _chunk(self, st, pc):
+        hbits, sizes, asg = _hep_chunk(
+            st["hbits"], st["sizes"], st["d"], st["slot"],
+            pc.edges, pc.valid, k=self.k, cap=self.cap)
+        return {**st, "hbits": hbits, "sizes": sizes}, asg
+
+    def _fold_bits_host(self, chunk, asg):
+        m = asg >= 0
+        p = asg[m]
+        bitops.set_np(self._bits_np, chunk[m, 0], p)
+        bitops.set_np(self._bits_np, chunk[m, 1], p)
+
+    def finalize(self, state, pass_counts):
+        extras = {
+            "hot_vertices": self._n_hot,
+            "hot_state_bytes": self._n_hot * self._row_bytes,
+            "memory_budget_bytes": self.spec.memory_budget_bytes,
+        }
+        return self._bits_np, state["sizes"], extras
+
+    def replication_state_bytes(self):
+        # the pinned rows are the only state scoring reads — this is what
+        # memory_budget_bytes bounds (the host-folded full matrix is a
+        # metrics oracle, not part of the partitioning algorithm)
+        return self._n_hot * self._row_bytes
+
+    # -- checkpoint / resume --------------------------------------------
+    def host_state(self):
+        return {"bits": self._bits_np}
+
+    def restore_host_state(self, arrays):
+        self._bits_np = np.ascontiguousarray(arrays["bits"])
+
+    def init_for_resume(self, stream, k, timer):
+        # degrees + the hot-slot map live in the device state; n_hot is a
+        # pure function of (budget, k, |V|) — no stream sweep needed
+        self._setup_run(stream, k)

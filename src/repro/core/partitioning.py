@@ -414,6 +414,10 @@ class PaddedChunk:
     edges: jnp.ndarray
     valid: jnp.ndarray
     n: int
+    #: the unpadded host-side chunk, kept by reference for chunk functions
+    #: with a host half (buffered re-streaming clusters the window on the
+    #: host before dispatching the batch) — avoids a device->host copy
+    host: np.ndarray | None = None
 
 
 @functools.lru_cache(maxsize=32)
@@ -428,8 +432,9 @@ def _valid_mask(chunk_size: int, n: int) -> jnp.ndarray:
 
 def pad_chunk(chunk: np.ndarray, chunk_size: int) -> PaddedChunk:
     n = chunk.shape[0]
+    host = chunk
     if n < chunk_size:
         chunk = np.concatenate(
             [chunk, np.zeros((chunk_size - n, 2), np.int32)], axis=0)
     return PaddedChunk(edges=jnp.asarray(chunk),
-                       valid=_valid_mask(chunk_size, n), n=n)
+                       valid=_valid_mask(chunk_size, n), n=n, host=host)

@@ -20,13 +20,14 @@ from __future__ import annotations
 import numpy as np
 
 from .engine import PartitionRunResult, run_spec
-from .specs import DBHSpec, HDRFSpec, StatelessSpec, TwoPSLSpec
+from .specs import (BufferedSpec, DBHSpec, HDRFSpec, HEPSpec,
+                    StatelessSpec, TwoPSLSpec)
 from .stream import EdgeStream
 
 __all__ = [
     "PARTITIONERS", "PartitionRunResult", "run_2ps_hdrf", "run_2psl",
-    "run_dbh", "run_greedy", "run_grid", "run_hdrf", "run_partitioner",
-    "run_random",
+    "run_buffered", "run_dbh", "run_greedy", "run_grid", "run_hdrf",
+    "run_hep", "run_partitioner", "run_random",
 ]
 
 
@@ -92,6 +93,30 @@ def run_random(stream: EdgeStream, k: int, *, alpha: float = 1.05,
     return run_spec(spec, stream, k, out_path=out_path)
 
 
+def run_hep(stream: EdgeStream, k: int, *, alpha: float = 1.05,
+            chunk_size: int = 1 << 16,
+            memory_budget_bytes: int = 1 << 26,
+            degrees: np.ndarray | None = None,
+            out_path: str | None = None) -> PartitionRunResult:
+    """HEP-style hybrid: pinned hot-vertex state under a byte budget,
+    DBH hashing for the cold remainder."""
+    spec = HEPSpec(alpha=alpha, chunk_size=chunk_size,
+                   memory_budget_bytes=memory_budget_bytes)
+    return run_spec(spec, stream, k, out_path=out_path, degrees=degrees)
+
+
+def run_buffered(stream: EdgeStream, k: int, *, alpha: float = 1.05,
+                 chunk_size: int = 1 << 14, buffer_edges: int = 1 << 16,
+                 max_vol_factor: float = 1.0,
+                 out_path: str | None = None) -> PartitionRunResult:
+    """Buffered re-streaming: window the stream, cluster each window's
+    mini-graph in memory, score the batch 2PS-L style."""
+    spec = BufferedSpec(alpha=alpha, chunk_size=chunk_size,
+                        buffer_edges=buffer_edges,
+                        max_vol_factor=max_vol_factor)
+    return run_spec(spec, stream, k, out_path=out_path)
+
+
 PARTITIONERS = {
     "2psl": run_2psl,
     "greedy": run_greedy,
@@ -100,6 +125,8 @@ PARTITIONERS = {
     "dbh": run_dbh,
     "grid": run_grid,
     "random": run_random,
+    "hep": run_hep,
+    "buffered": run_buffered,
 }
 
 

@@ -113,6 +113,29 @@ class PartitionerSpec:
         """Human-readable name used in results/reports."""
         raise NotImplementedError
 
+    # -- harness introspection -------------------------------------------
+    @property
+    def enforces_capacity(self) -> bool:
+        """True when the admission path guarantees the paper's hard
+        per-partition cap ``capacity(|E|, k, alpha)`` at the SPEC's alpha.
+        The cross-spec test harness asserts the bound exactly for specs
+        that claim it — new specs declare it here instead of being
+        hand-listed in the tests."""
+        return True
+
+    def with_test_geometry(self, chunk_size: int) -> "PartitionerSpec":
+        """Scale every stream-geometry knob for a small test stream.
+
+        The cross-spec harness and the CLI crash drills run each
+        registered spec over a few-thousand-edge graph; a spec whose
+        geometry is expressed in absolute edge counts (buffer windows,
+        byte budgets) must shrink those knobs alongside ``chunk_size`` so
+        the small stream still exercises several chunks/windows and a
+        hybrid in/out-of-memory boundary.  Subclasses with such knobs
+        override — this is the ONE hook that lets new specs join every
+        registry-introspecting suite with zero per-spec special-casing."""
+        return self.replace(chunk_size=chunk_size)
+
     # -- serialization ---------------------------------------------------
     def to_dict(self) -> dict:
         d = {"algorithm": self.algorithm}
@@ -176,6 +199,10 @@ class HDRFSpec(PartitionerSpec):
                f"(got {self.chunk_size!r})")
 
     @property
+    def enforces_capacity(self) -> bool:
+        return self.use_cap
+
+    @property
     def algorithm(self) -> str:
         return "hdrf" if self.degree_weighted else "greedy"
 
@@ -199,6 +226,10 @@ class DBHSpec(PartitionerSpec):
                "DBH hashes instead of scoring — it cannot honor a "
                "dcn_penalty (host_groups alone is fine: it only adds the "
                "cross-host replication metric)")
+
+    @property
+    def enforces_capacity(self) -> bool:
+        return False
 
     @property
     def algorithm(self) -> str:
@@ -226,12 +257,112 @@ class StatelessSpec(PartitionerSpec):
                "only adds the cross-host replication metric)")
 
     @property
+    def enforces_capacity(self) -> bool:
+        return False
+
+    @property
     def algorithm(self) -> str:
         return self.variant
 
     @property
     def display_name(self) -> str:
         return {"random": "Random", "grid": "Grid"}[self.variant]
+
+
+@dataclass(frozen=True)
+class HEPSpec(PartitionerSpec):
+    """Hybrid edge partitioner (arXiv:2103.12594-style): pin the replication
+    state of the top-degree vertices in memory under an explicit byte
+    budget, score edges touching that hot core by NE-style replica
+    affinity, and route everything else through the stateless DBH hash
+    that needs no per-vertex state at all.
+
+    ``memory_budget_bytes`` bounds the partitioner's resident scoring
+    state: each pinned vertex costs one packed bit-matrix row of
+    ``ceil(k/32) * 4`` bytes, and the hot set is the top
+    ``memory_budget_bytes // row_bytes`` vertices of the degree pass.  The
+    ``engine.replication_state_bytes`` gauge reports exactly this pinned
+    footprint for HEP runs, so tests and benchmarks can assert the budget
+    is respected."""
+
+    chunk_size: int = 1 << 16
+    memory_budget_bytes: int = 1 << 26
+
+    def validate(self):
+        super().validate()
+        _check(isinstance(self.memory_budget_bytes, int)
+               and self.memory_budget_bytes >= 0,
+               f"memory_budget_bytes must be an int >= 0 "
+               f"(got {self.memory_budget_bytes!r})")
+        _check(self.dcn_penalty == 0.0,
+               "HEP's hash fallback cannot honor a dcn_penalty "
+               "(host_groups alone is fine: it only adds the cross-host "
+               "replication metric)")
+
+    @property
+    def algorithm(self) -> str:
+        return "hep"
+
+    @property
+    def display_name(self) -> str:
+        return "HEP"
+
+    def with_test_geometry(self, chunk_size: int) -> "PartitionerSpec":
+        # a tiny budget (128 rows at k <= 32) keeps the test graphs'
+        # hot/cold boundary inside the vertex range, so both the in-memory
+        # and the hash path are exercised
+        return self.replace(chunk_size=chunk_size, memory_budget_bytes=512)
+
+
+@dataclass(frozen=True)
+class BufferedSpec(PartitionerSpec):
+    """Buffered re-streaming (arXiv:2402.11980-style): accumulate a window
+    of ``buffer_edges`` edges, build an in-memory mini-graph of the window,
+    cluster it, and partition the whole batch with 2PS-L's two-candidate
+    scoring against the global replication state before flushing.
+
+    The engine regroups the stream into windows of
+    ``window_chunks * chunk_size`` edges (``buffer_edges`` rounded up to
+    whole chunks), so the existing depth-N pipeline overlaps the next
+    window's buffer fill with the current window's clustering + device
+    scoring.  Checkpoints land at window boundaries — a window is the
+    atomic unit of work, so mid-window state never needs snapshotting."""
+
+    chunk_size: int = 1 << 14
+    buffer_edges: int = 1 << 16
+    max_vol_factor: float = 1.0    # window-local cluster volume cap factor
+
+    def validate(self):
+        super().validate()
+        _check(isinstance(self.buffer_edges, int) and self.buffer_edges >= 1,
+               f"buffer_edges must be a positive int "
+               f"(got {self.buffer_edges!r})")
+        _check(self.max_vol_factor > 0,
+               f"max_vol_factor must be > 0 (got {self.max_vol_factor!r})")
+        _check(self.dcn_penalty == 0.0,
+               "buffered re-streaming scores within windows and is not yet "
+               "hierarchy-aware — it cannot honor a dcn_penalty "
+               "(host_groups alone is fine: it only adds the cross-host "
+               "replication metric)")
+
+    @property
+    def window_chunks(self) -> int:
+        """Engine chunks per buffer window (``buffer_edges`` rounded up)."""
+        return max(1, -(-self.buffer_edges // self.chunk_size))
+
+    @property
+    def algorithm(self) -> str:
+        return "buffered"
+
+    @property
+    def display_name(self) -> str:
+        return "Buffered"
+
+    def with_test_geometry(self, chunk_size: int) -> "PartitionerSpec":
+        # two chunks per window: small streams still see several windows
+        # AND the window/chunk regrouping is genuinely exercised
+        return self.replace(chunk_size=chunk_size,
+                            buffer_edges=2 * chunk_size)
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +377,8 @@ SPEC_REGISTRY: dict[str, tuple[type, dict]] = {
     "dbh": (DBHSpec, {}),
     "grid": (StatelessSpec, {"variant": "grid"}),
     "random": (StatelessSpec, {"variant": "random"}),
+    "hep": (HEPSpec, {}),
+    "buffered": (BufferedSpec, {}),
 }
 
 

@@ -31,12 +31,23 @@ LANES = 128
 BLOCK_ROWS = 8  # 8 * 128 = 1024 edges per grid step
 
 
-def _score(d_self, d_other, vol_self, vol_other, rep, on_p):
+def _g(d_self, d_other, rep):
     dsum = jnp.maximum(d_self + d_other, 1.0)
-    g = jnp.where(rep, 1.0 + (1.0 - d_self / dsum), 0.0)
+    return jnp.where(rep, 1.0 + (1.0 - d_self / dsum), 0.0)
+
+
+def _sc(vol_self, vol_other, on_p):
     vsum = jnp.maximum(vol_self + vol_other, 1.0)
-    sc = jnp.where(on_p, vol_self / vsum, 0.0)
-    return g + sc
+    return jnp.where(on_p, vol_self / vsum, 0.0)
+
+
+def _candidate_score(du, dv, vol_u, vol_v, rep_u, rep_v, cu_on_p, cv_on_p):
+    # summed in exactly ``twopsl_score``'s order (g_u + g_v + sc_u + sc_v):
+    # float addition is not associative, and a different grouping here can
+    # flip a near-tie edge against the jnp backend — the engine promises
+    # bit-identical assignments across backends, not merely close scores
+    return (_g(du, dv, rep_u) + _g(dv, du, rep_v)
+            + _sc(vol_u, vol_v, cu_on_p) + _sc(vol_v, vol_u, cv_on_p))
 
 
 def _two_candidate_scores(du_ref, dv_ref, vol_u_ref, vol_v_ref,
@@ -48,11 +59,13 @@ def _two_candidate_scores(du_ref, dv_ref, vol_u_ref, vol_v_ref,
     vol_v = vol_v_ref[...].astype(jnp.float32)
 
     # candidate 1 = pu: u's cluster is on pu by construction
-    s1 = (_score(du, dv, vol_u, vol_v, rep_u1_ref[...] != 0, True)
-          + _score(dv, du, vol_v, vol_u, rep_v1_ref[...] != 0, pv == pu))
+    s1 = _candidate_score(du, dv, vol_u, vol_v,
+                          rep_u1_ref[...] != 0, rep_v1_ref[...] != 0,
+                          True, pv == pu)
     # candidate 2 = pv: v's cluster is on pv by construction
-    s2 = (_score(du, dv, vol_u, vol_v, rep_u2_ref[...] != 0, pu == pv)
-          + _score(dv, du, vol_v, vol_u, rep_v2_ref[...] != 0, True))
+    s2 = _candidate_score(du, dv, vol_u, vol_v,
+                          rep_u2_ref[...] != 0, rep_v2_ref[...] != 0,
+                          pu == pv, True)
     return s1, s2
 
 

@@ -60,8 +60,8 @@ import sys
 
 from repro import obs
 from repro.core import (MemmapEdgeStream, PartitionArtifact,
-                        SPEC_REGISTRY, ThrottledEdgeStream, run_spec,
-                        spec_for)
+                        SPEC_REGISTRY, SpecError, ThrottledEdgeStream,
+                        run_spec, spec_for)
 from repro.core.artifact import ASSIGNMENT_FILE
 
 
@@ -75,6 +75,17 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=1.05)
     ap.add_argument("--cluster-passes", type=int, default=1)
     ap.add_argument("--chunk-size", type=int, default=1 << 16)
+    ap.add_argument("--memory-budget-bytes", type=int, default=None,
+                    help="(hep) byte budget for the pinned hot-vertex "
+                         "replication rows — the partitioner's resident "
+                         "scoring state never exceeds it (reported as "
+                         "hot_state_bytes and via the "
+                         "engine.replication_state_bytes gauge)")
+    ap.add_argument("--buffer-edges", type=int, default=None,
+                    help="(buffered) edges per re-streaming window; the "
+                         "engine regroups the stream into ceil(buffer/"
+                         "chunk) chunks per window, and checkpoints land "
+                         "on window boundaries")
     ap.add_argument("--out", default=None,
                     help="write int32 assignment memmap here")
     ap.add_argument("--artifact-dir", default=None,
@@ -169,9 +180,6 @@ def main(argv=None):
     if args.dcn_penalty and args.hosts is None:
         ap.error("--dcn-penalty needs --hosts (the penalty is defined per "
                  "host group)")
-    if args.dcn_penalty and args.algorithm in ("dbh", "grid", "random"):
-        ap.error(f"--dcn-penalty only applies to scoring algorithms; "
-                 f"{args.algorithm!r} hashes")
     checkpoint_dir = args.checkpoint_dir
     if checkpoint_dir is None and args.artifact_dir and (
             args.checkpoint_every or args.resume):
@@ -194,7 +202,17 @@ def main(argv=None):
         overrides["pipeline_depth"] = args.pipeline_depth
     if args.scoring_backend is not None:
         overrides["scoring_backend"] = args.scoring_backend
-    spec = spec_for(args.algorithm, **overrides)
+    if args.memory_budget_bytes is not None:
+        overrides["memory_budget_bytes"] = args.memory_budget_bytes
+    if args.buffer_edges is not None:
+        overrides["buffer_edges"] = args.buffer_edges
+    # the spec itself is the validator: algorithms reject knobs they do
+    # not have (TypeError) or cannot honor (SpecError, e.g. a dcn_penalty
+    # on a hash partitioner) — no per-algorithm flag lists here
+    try:
+        spec = spec_for(args.algorithm, **overrides)
+    except (SpecError, TypeError) as e:
+        ap.error(str(e))
 
     out_path = args.out
     if args.artifact_dir and out_path is None:

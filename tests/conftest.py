@@ -31,6 +31,21 @@ _SLOW_SUBPROCESS_TESTS = {
 }
 
 
+def tspec(name, chunk_size=512, **overrides):
+    """Registered spec scaled to a small test stream.
+
+    ``overrides`` apply at construction (pipeline_depth, alpha, ...), then
+    ``PartitionerSpec.with_test_geometry`` shrinks every absolute
+    stream-geometry knob (chunk size, buffer windows, byte budgets)
+    together, so a few-thousand-edge graph still spans several
+    chunks/windows and crosses any in/out-of-memory boundary the spec has.
+    Suites parametrize over ``sorted(SPEC_REGISTRY)`` and build specs
+    through this — new algorithms join every suite by registering, with
+    no hand-listed per-algorithm tables."""
+    from repro.core import spec_for
+    return spec_for(name, **overrides).with_test_geometry(chunk_size)
+
+
 def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.name.split("[")[0] in _SLOW_SUBPROCESS_TESTS:

@@ -15,11 +15,22 @@ import repro.core.bitops as bitops
 from repro.core import (InMemoryEdgeStream, SPEC_REGISTRY, capacity,
                         quality_from_assignment, quality_from_bitmatrix,
                         run_spec, spec_for)
+from conftest import tspec
 
 ALL_ALGOS = sorted(SPEC_REGISTRY)
-#: algorithms whose admission enforces the paper's hard per-partition cap
-CAPACITY_ENFORCING = ("2ps-hdrf", "2psl")
+#: algorithms whose admission enforces the paper's hard per-partition cap —
+#: declared by the spec itself, never hand-listed here
+CAPACITY_ENFORCING = tuple(n for n in ALL_ALGOS
+                           if spec_for(n).enforces_capacity)
 V, K, CHUNK = 300, 8, 256
+
+
+def test_capacity_enforcing_set_is_introspected():
+    """The capacity suite follows the registry: the paper's algorithms and
+    both admission-tailed newcomers claim the bound, the hash family and
+    uncapped HDRF do not."""
+    assert {"2psl", "2ps-hdrf", "hep", "buffered"} <= set(CAPACITY_ENFORCING)
+    assert not {"dbh", "grid", "random", "hdrf"} & set(CAPACITY_ENFORCING)
 
 
 @pytest.fixture(scope="module")
@@ -33,7 +44,7 @@ def graph():
 def runs(graph):
     """One engine run per registered spec, shared by every invariant."""
     stream = InMemoryEdgeStream(graph, num_vertices=V)
-    return {name: run_spec(spec_for(name, chunk_size=CHUNK), stream, K)
+    return {name: run_spec(tspec(name, CHUNK), stream, K)
             for name in ALL_ALGOS}
 
 
@@ -86,7 +97,7 @@ def test_hard_capacity_bound(name, graph, runs):
     """The paper's algorithms admit edges only up to
     ``capacity(|E|, k, alpha)`` — the bound must hold with the SPEC's
     alpha, not the measured one."""
-    spec = spec_for(name, chunk_size=CHUNK)
+    spec = tspec(name, CHUNK)
     assert runs[name].quality.max_partition \
         <= capacity(len(graph), K, spec.alpha)
 

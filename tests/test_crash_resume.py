@@ -5,6 +5,7 @@ assignment bytes must match an uninterrupted run, and the artifact
 manifest must record the resume.  This is the authoritative crash test:
 the on-disk state the resumed run sees is exactly what a real crash
 leaves (no atexit handlers, no flushes)."""
+import dataclasses
 import hashlib
 import json
 import os
@@ -14,10 +15,25 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import SPEC_REGISTRY
+from repro.core import SPEC_REGISTRY, spec_for
 
 ALL_ALGOS = sorted(SPEC_REGISTRY)
 _SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _geometry_flags(algorithm, chunk_size=512):
+    """CLI flags for the spec's test geometry, introspected by diffing the
+    geometry-scaled spec against the plain chunk_size override.  This also
+    asserts, implicitly, that the CLI exposes every geometry knob a spec
+    declares (an unexposed knob fails the run with an argparse error)."""
+    base = spec_for(algorithm, chunk_size=chunk_size)
+    geo = spec_for(algorithm).with_test_geometry(chunk_size)
+    flags = []
+    for f in dataclasses.fields(geo):
+        a, b = getattr(geo, f.name), getattr(base, f.name)
+        if a != b:
+            flags += [f"--{f.name.replace('_', '-')}", str(a)]
+    return flags
 
 
 @pytest.fixture(scope="module")
@@ -38,7 +54,8 @@ def _cli(graph_bin, artifact_dir, algorithm, *extra, env_extra=None):
     return subprocess.run(
         [sys.executable, "-m", "repro.launch.partition",
          "--input", graph_bin, "--k", "8", "--algorithm", algorithm,
-         "--chunk-size", "512", "--artifact-dir", artifact_dir,
+         "--chunk-size", "512", *_geometry_flags(algorithm),
+         "--artifact-dir", artifact_dir,
          "--no-plan", "--json", *extra],
         env=env, capture_output=True, text=True)
 

@@ -13,13 +13,14 @@ from repro.core import (InMemoryEdgeStream, MemmapEdgeStream, SPEC_REGISTRY,
                         compute_degrees_streaming, resolve_scoring_backend,
                         run_spec, spec_for)
 from repro.core.stream import prefetch
+from conftest import tspec
 
 ALL_ALGOS = sorted(SPEC_REGISTRY)
 
-# small enough chunks that the seed graph spans several chunks + a ragged
-# tail in every pass (HDRF chunk sizes must be multiples of 64)
-_CHUNKS = {"2psl": 512, "2ps-hdrf": 512, "hdrf": 512, "greedy": 512,
-           "dbh": 1024, "grid": 1024, "random": 1024}
+# small enough that the seed graph spans several chunks (and, for the
+# buffered spec, several windows) + a ragged tail in every pass; specs
+# scale their own geometry knobs via tspec/with_test_geometry
+_CHUNK = 512
 
 
 @pytest.fixture(scope="module")
@@ -91,11 +92,9 @@ def test_pipeline_depth_bit_identical(name, seed_graph, disk_stream):
     """Depths 1/2/4 must produce bit-identical assignments and quality on
     both the memmapped and the throttled stream."""
     k = 8
-    cs = _CHUNKS[name]
-    base = run_spec(spec_for(name, chunk_size=cs, pipeline_depth=1),
-                    disk_stream, k)
+    base = run_spec(tspec(name, _CHUNK, pipeline_depth=1), disk_stream, k)
     for depth in (2, 4):
-        res = run_spec(spec_for(name, chunk_size=cs, pipeline_depth=depth),
+        res = run_spec(tspec(name, _CHUNK, pipeline_depth=depth),
                        disk_stream, k)
         np.testing.assert_array_equal(np.asarray(base.assignment),
                                       np.asarray(res.assignment),
@@ -105,7 +104,7 @@ def test_pipeline_depth_bit_identical(name, seed_graph, disk_stream):
         assert res.quality.balance == base.quality.balance
 
     thr = ThrottledEdgeStream(disk_stream, read_bytes_per_sec=1e9)
-    res = run_spec(spec_for(name, chunk_size=cs, pipeline_depth=4), thr, k)
+    res = run_spec(tspec(name, _CHUNK, pipeline_depth=4), thr, k)
     np.testing.assert_array_equal(np.asarray(base.assignment),
                                   np.asarray(res.assignment))
     assert res.simulated_io_seconds > 0
@@ -159,10 +158,8 @@ def test_pallas_backend_matches_jnp_assignments(name, seed_graph):
     if resolve_scoring_backend("pallas") != "pallas":
         pytest.skip("Pallas unavailable in this jax build")
     stream = InMemoryEdgeStream(seed_graph)
-    cs = _CHUNKS[name]
-    rj = run_spec(spec_for(name, chunk_size=cs), stream, 8)
-    rp = run_spec(spec_for(name, chunk_size=cs, scoring_backend="pallas"),
-                  stream, 8)
+    rj = run_spec(tspec(name, _CHUNK), stream, 8)
+    rp = run_spec(tspec(name, _CHUNK, scoring_backend="pallas"), stream, 8)
     np.testing.assert_array_equal(np.asarray(rj.assignment),
                                   np.asarray(rp.assignment))
     assert rj.quality.replication_factor == rp.quality.replication_factor
@@ -216,10 +213,8 @@ def test_engine_parity_fuzz(name, case):
     if not len(edges):
         return
     stream = InMemoryEdgeStream(edges, num_vertices=n_v)
-    base = run_spec(spec_for(name, chunk_size=chunk, pipeline_depth=1),
-                    stream, k)
-    deep = run_spec(spec_for(name, chunk_size=chunk, pipeline_depth=depth),
-                    stream, k)
+    base = run_spec(tspec(name, chunk, pipeline_depth=1), stream, k)
+    deep = run_spec(tspec(name, chunk, pipeline_depth=depth), stream, k)
     np.testing.assert_array_equal(
         np.asarray(base.assignment), np.asarray(deep.assignment),
         err_msg=f"{name} depth 1 vs {depth} (V={n_v} E={len(edges)} "
@@ -228,9 +223,8 @@ def test_engine_parity_fuzz(name, case):
         == deep.quality.replication_factor
     assert base.quality.balance == deep.quality.balance
     if resolve_scoring_backend("pallas") == "pallas":
-        pal = run_spec(spec_for(name, chunk_size=chunk,
-                                pipeline_depth=depth,
-                                scoring_backend="pallas"), stream, k)
+        pal = run_spec(tspec(name, chunk, pipeline_depth=depth,
+                             scoring_backend="pallas"), stream, k)
         np.testing.assert_array_equal(
             np.asarray(base.assignment), np.asarray(pal.assignment),
             err_msg=f"{name} jnp vs pallas backend")

@@ -12,11 +12,31 @@ from repro.core import (InMemoryEdgeStream, SPEC_REGISTRY, SpecError,
                         quality_from_assignment, run_spec, spec_for,
                         spec_from_dict)
 from repro.core import bitops
+from conftest import tspec
 
-#: specs whose scoring pass honors the penalty
-STATEFUL = ("2psl", "2ps-hdrf", "hdrf", "greedy")
 ALL_ALGOS = sorted(SPEC_REGISTRY)
+
+
+def _honors_penalty(name):
+    """Introspected from spec validation: a spec that cannot steer its
+    scoring by the penalty rejects a nonzero one outright."""
+    try:
+        spec_for(name, host_groups=2, dcn_penalty=1.0)
+        return True
+    except SpecError:
+        return False
+
+
+#: specs whose scoring pass honors the penalty — derived, not hand-listed,
+#: so new registry entries land in the right suite automatically
+STATEFUL = tuple(n for n in ALL_ALGOS if _honors_penalty(n))
+HASHING = tuple(n for n in ALL_ALGOS if not _honors_penalty(n))
 V, K, CHUNK = 300, 8, 256
+
+
+def test_penalty_honoring_split_is_introspected():
+    assert set(STATEFUL) == {"2psl", "2ps-hdrf", "hdrf", "greedy"}
+    assert {"dbh", "grid", "random", "hep", "buffered"} <= set(HASHING)
 
 
 @pytest.fixture(scope="module")
@@ -49,8 +69,9 @@ def test_spec_validation_and_roundtrip():
         spec_for("2psl", dcn_penalty=-1.0, host_groups=2)
     with pytest.raises(SpecError):
         spec_for("2psl", dcn_penalty=1.0)         # penalty without groups
-    # the hash family cannot honor a penalty (no scoring pass) ...
-    for name in ("dbh", "grid", "random"):
+    # specs without a penalty-steerable scoring pass reject a nonzero
+    # penalty (the hash family, HEP's hash fallback, buffered windows) ...
+    for name in HASHING:
         with pytest.raises(SpecError):
             spec_for(name, host_groups=2, dcn_penalty=1.0)
         # ... but host_groups alone is fine (cross-host metric only)
@@ -74,17 +95,16 @@ def test_zero_penalty_bit_identical_to_flat(name, graph):
     assignment bit for bit (and, for the stateful specs, so must a single
     host group even with a nonzero penalty — one host has no DCN)."""
     stream = InMemoryEdgeStream(graph, num_vertices=V)
-    flat = run_spec(spec_for(name, chunk_size=CHUNK), stream, K)
-    zero = run_spec(spec_for(name, chunk_size=CHUNK, host_groups=2),
-                    stream, K)
+    flat = run_spec(tspec(name, CHUNK), stream, K)
+    zero = run_spec(tspec(name, CHUNK, host_groups=2), stream, K)
     np.testing.assert_array_equal(np.asarray(flat.assignment),
                                   np.asarray(zero.assignment))
     assert zero.quality.replication_factor \
         == flat.quality.replication_factor
     assert "cross_host_rf" in zero.extras
     if name in STATEFUL:
-        one = run_spec(spec_for(name, chunk_size=CHUNK, host_groups=1,
-                                dcn_penalty=2.0), stream, K)
+        one = run_spec(tspec(name, CHUNK, host_groups=1,
+                             dcn_penalty=2.0), stream, K)
         np.testing.assert_array_equal(np.asarray(flat.assignment),
                                       np.asarray(one.assignment))
 
@@ -141,7 +161,7 @@ def test_cross_host_rf_invariants(name, graph):
     to 1.0, and any grouping sits in [RF / (k/H), RF] — a host group holds
     a vertex at most once however many of its partitions do."""
     stream = InMemoryEdgeStream(graph, num_vertices=V)
-    res = run_spec(spec_for(name, chunk_size=CHUNK), stream, K)
+    res = run_spec(tspec(name, CHUNK), stream, K)
     asg = np.asarray(res.assignment)
     bm = _bitmatrix(graph, asg, K)
     flat_rf = quality_from_assignment(graph, asg, V, K).replication_factor

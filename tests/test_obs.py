@@ -15,9 +15,9 @@ from repro.obs import (NULL_REGISTRY, NULL_TRACER, MetricsRegistry,
                        trace_summary_table, use_registry, use_tracer,
                        validate_chrome_trace, write_chrome_trace)
 
+from conftest import tspec
+
 ALL_ALGOS = sorted(SPEC_REGISTRY)
-_CHUNKS = {"2psl": 512, "2ps-hdrf": 512, "hdrf": 512, "greedy": 512,
-           "dbh": 1024, "grid": 1024, "random": 1024}
 
 
 @pytest.fixture(scope="module")
@@ -223,7 +223,7 @@ def test_traced_run_bit_identical_all_specs(name, seed_graph):
     """Tracing only observes the pipeline: assignment and quality match an
     untraced run exactly, and the stall report is well-formed."""
     k = 8
-    spec = spec_for(name, chunk_size=_CHUNKS[name])
+    spec = tspec(name)
     plain = run_spec(spec, InMemoryEdgeStream(seed_graph), k)
     tracer, reg = Tracer(), MetricsRegistry()
     traced = run_spec(spec, InMemoryEdgeStream(seed_graph), k,

@@ -19,10 +19,9 @@ from repro.robust import (ArtifactIntegrityError, ChunkFault,
                           latest_checkpoint, load_engine_checkpoint,
                           save_engine_checkpoint, spec_hash)
 from repro.robust.checkpoint import CheckpointMismatchError, check_compatible
+from conftest import tspec
 
 ALL_ALGOS = sorted(SPEC_REGISTRY)
-_CHUNKS = {"2psl": 512, "2ps-hdrf": 512, "hdrf": 512, "greedy": 512,
-           "dbh": 1024, "grid": 1024, "random": 1024}
 
 _NO_SLEEP = RetryPolicy(max_retries=3, backoff_base_s=0.0)
 
@@ -219,8 +218,10 @@ def test_resume_from_mid_run_checkpoint_bit_identical(name, seed_graph,
     """Checkpoint every 3 chunks, then restart from the LATEST snapshot —
     replaying only the tail of the final pass must reproduce the clean
     assignment bit for bit (for 2PS specs the latest checkpoint sits
-    inside the merge/scoring pass, crossing the prepartition boundary)."""
-    spec = spec_for(name, chunk_size=_CHUNKS[name])
+    inside the merge/scoring pass, crossing the prepartition boundary;
+    for the buffered spec the cursor counts whole windows, so the resume
+    replays from a window boundary)."""
+    spec = tspec(name)
     clean = run_spec(spec, stream, 8)
     d = str(tmp_path / "ck")
     run_spec(spec, stream, 8, checkpoint_every_chunks=3, checkpoint_dir=d)
@@ -235,13 +236,39 @@ def test_resume_from_mid_run_checkpoint_bit_identical(name, seed_graph,
         == clean.quality.replication_factor
 
 
+def test_buffered_checkpoints_at_window_boundaries(stream, tmp_path):
+    """The buffered spec's atomic unit is the WINDOW (window_chunks engine
+    chunks): the checkpoint cursor counts windows, the snapshot lands
+    exactly on a window's edge boundary, the window tables ride inside
+    the flat device state, and the resumed run replays the remaining
+    whole windows into a bit-identical assignment."""
+    spec = tspec("buffered")           # 512-edge chunks, 2-chunk windows
+    eff = spec.chunk_size * spec.window_chunks
+    assert spec.window_chunks == 2     # the regrouping is actually on
+    clean = run_spec(spec, stream, 8)
+    d = str(tmp_path / "ck")
+    run_spec(spec, stream, 8, checkpoint_every_chunks=3, checkpoint_dir=d)
+    ck = load_engine_checkpoint(d)
+    # cursor 3 == three whole windows dispatched, never a mid-window edge
+    assert ck.meta["next_chunk"] == 3
+    assert ck.meta["edge_lo"] == 3 * eff
+    assert {"bits", "sizes", "wv2c", "wc2p", "wvol"} \
+        <= set(ck.device_state)        # stale window tables are harmless:
+    #                                    the next window rewrites them
+    res = run_spec(spec, stream, 8, resume_from=d)
+    np.testing.assert_array_equal(np.asarray(clean.assignment),
+                                  np.asarray(res.assignment))
+    assert res.extras["resumes"] == 1
+    assert res.extras["windows"] < clean.extras["windows"]  # only the tail
+
+
 @pytest.mark.parametrize("name", ["hdrf", "greedy", "random"])
 def test_interrupted_run_resumes_bit_identical(name, seed_graph, stream,
                                                tmp_path):
     """A permanent IO fault (no retry budget) aborts the single-pass run
     after two checkpoints; a resumed run with a healthy stream finishes
     into the clean assignment."""
-    spec = spec_for(name, chunk_size=_CHUNKS[name])
+    spec = tspec(name)
     clean = run_spec(spec, stream, 8)
     d = str(tmp_path / "ck")
     dead = FaultyStream(_fresh(seed_graph),
@@ -336,7 +363,7 @@ def test_resume_equivalence_fuzz(case, tmp_path_factory):
     if not len(e):
         return
     stream = InMemoryEdgeStream(e, num_vertices=n_v)
-    spec = spec_for(name, chunk_size=_CHUNKS[name], pipeline_depth=depth)
+    spec = tspec(name, pipeline_depth=depth)
     clean = run_spec(spec, stream, 4)
     d = str(tmp_path_factory.mktemp("resume") / "ck")
     run_spec(spec, stream, 4, checkpoint_every_chunks=every,
