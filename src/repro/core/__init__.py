@@ -8,8 +8,9 @@ from .artifact import PartitionArtifact
 from .clustering import (ClusteringResult, cluster_in_memory_scan,
                          cluster_sequential, default_max_vol,
                          streaming_clustering)
-from .engine import (PartitionRunResult, StreamingPartitioner, StreamPass,
-                     build_partitioner, compute_degrees_streaming, run_spec)
+from .engine import (MERGE_RULES, PartitionRunResult, StreamingPartitioner,
+                     StreamPass, build_partitioner,
+                     compute_degrees_streaming, merge_state_dicts, run_spec)
 from .scoring import resolve_scoring_backend
 from .mapping import map_clusters_lpt, map_clusters_lpt_jax
 from .metrics import (PartitionQuality, capacity, cross_host_replicas,
@@ -44,4 +45,6 @@ __all__ = [
     "StreamingPartitioner", "StreamPass", "build_partitioner", "run_spec",
     "PartitionArtifact", "compute_degrees_streaming",
     "resolve_scoring_backend",
+    # shard merge protocol (repro.shard)
+    "MERGE_RULES", "merge_state_dicts",
 ]

@@ -61,6 +61,7 @@ O(|V|*k) bits regardless of |E| — the paper's out-of-core property.
 from __future__ import annotations
 
 import functools
+import itertools
 import math
 import os
 import time
@@ -152,6 +153,105 @@ def _alloc_assignment(num_edges: int, out_path: str | None,
     mm = np.memmap(out_path, dtype=np.int32, mode="w+", shape=(num_edges,))
     mm[:] = -1
     return mm
+
+
+def _assignment_writer(dest, offset: int = 0):
+    """Row sink for the pass pipeline: writes chunk results into ``dest``
+    at ``row + offset`` and returns the number of rows assigned.  The
+    sequential engine writes the global assignment (offset 0); a shard
+    worker writes its rank-local slice (offset maps global stream rows
+    onto the slice)."""
+    def write_rows(lo, n, asg_np, merge):
+        lo = lo + offset
+        if merge:
+            sel = asg_np >= 0
+            dest[lo:lo + n][sel] = asg_np[sel]
+            return int(sel.sum())
+        dest[lo:lo + n] = asg_np
+        return int((asg_np >= 0).sum())
+    return write_rows
+
+
+# ---------------------------------------------------------------------------
+# shard-state merging (repro.shard)
+# ---------------------------------------------------------------------------
+# A sharded run gives every worker the same round-base state, streams N
+# disjoint chunk ranges, and reconciles the N end states back into one.
+# Each partitioner declares one rule per state key (``merge_rules``):
+#
+#   'sum'       additive counters (partition sizes, HDRF partial degrees):
+#               merged = base + sum(shard - base), exact for integers
+#   'or'        packed uint32 replication bit matrices: merged = base OR
+#               every shard's bits (bitops rows only ever gain bits)
+#   'constant'  prologue tables every worker derives identically and no
+#               pass mutates (degrees, cluster tables, host maps): merged
+#               = base
+#   'scratch'   per-window scratch overwritten before every read (the
+#               buffered partitioner's window tables): merged = base —
+#               any worker's copy would do, the base keeps the merge
+#               order-independent
+#
+# All four rules are commutative and associative in the shard states, so
+# every worker can compute the identical merge locally with no designated
+# reducer (tests/test_shard_merge.py fuzzes this per registered spec).
+
+MERGE_RULES = ("sum", "or", "constant", "scratch")
+
+
+def merge_state_dicts(base: dict, shards, rules: dict) -> dict:
+    """Reconcile per-shard copies of one flat state dict (see above).
+    ``base`` is the round-start state every shard started from; a single
+    shard short-circuits to its own state unchanged (this is what makes
+    ``shards=1`` bit-identical to the sequential engine)."""
+    shards = list(shards)
+    if not shards:
+        raise ValueError("merge_state_dicts needs at least one shard")
+    if len(shards) == 1:
+        return {k: np.asarray(v) for k, v in shards[0].items()}
+    out = {}
+    for key in shards[0]:
+        rule = rules.get(key)
+        if rule is None:
+            raise KeyError(
+                f"no merge rule for state key {key!r}: the partitioner's "
+                f"merge_rules() must cover every device/host state key "
+                f"(got rules for {sorted(rules)})")
+        b = np.asarray(base[key])
+        if rule in ("constant", "scratch"):
+            out[key] = b
+        elif rule == "or":
+            acc = b.copy()
+            for s in shards:
+                acc |= np.asarray(s[key])
+            out[key] = acc
+        elif rule == "sum":
+            wide = (np.float64 if np.issubdtype(b.dtype, np.floating)
+                    else np.int64)
+            acc = b.astype(wide)
+            for s in shards:
+                acc = acc + (np.asarray(s[key]).astype(wide)
+                             - b.astype(wide))
+            out[key] = acc.astype(b.dtype)
+        else:
+            raise ValueError(f"unknown merge rule {rule!r} for {key!r} "
+                             f"(expected one of {MERGE_RULES})")
+    return out
+
+
+def _set_replication_gauge(part, state, metrics) -> None:
+    """Refresh ``engine.replication_state_bytes``: budgeted partitioners
+    (HEP) report their pinned footprint; everyone else the replication
+    bit matrix currently resident — device-side when the pass folds it
+    on-device, else the host-folded copy.  Called at finalize, on resume
+    restore, and after every shard merge (the gauge used to go stale
+    across resumes)."""
+    resident = part.replication_state_bytes()
+    if resident is None:
+        bits = state.get("bits") if isinstance(state, dict) else None
+        if bits is None:
+            bits = part.host_state().get("bits")
+        resident = int(np.asarray(bits).nbytes) if bits is not None else 0
+    metrics.gauge("engine.replication_state_bytes").set(int(resident))
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +374,74 @@ class StreamingPartitioner:
         ``memory_budget_bytes``."""
         return None
 
+    # -- shard merge protocol (repro.shard) ------------------------------
+
+    def merge_rules(self) -> dict:
+        """State key -> merge rule (one of ``MERGE_RULES``) covering every
+        key of both the device-state dict and ``host_state()`` — what a
+        sharded run uses to reconcile N workers' round-end states.  Keys
+        only present in some configurations (post-``setup`` uploads,
+        hosted hbits) must still be covered; unused rules are harmless."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not define merge_rules(); "
+            f"sharded execution (repro.shard) needs one rule per state "
+            f"key")
+
+    def merge_states(self, base_device: dict, base_host: dict,
+                     shard_states) -> tuple:
+        """Reconcile N shards' ``(device_state, host_state)`` dict pairs,
+        all produced from the same ``(base_device, base_host)`` round
+        base, into one merged ``(device, host)`` pair.  Deterministic,
+        commutative, and associative — every rank computes the identical
+        merge locally, so the round protocol needs no designated
+        reducer."""
+        rules = self.merge_rules()
+        dev = merge_state_dicts(base_device,
+                                [d for d, _ in shard_states], rules)
+        host = merge_state_dicts(base_host,
+                                 [h for _, h in shard_states], rules)
+        return dev, host
+
+    def begin_shard_round(self, base_sizes, rows: int,
+                          total_rows: int) -> None:
+        """Shard-aware balance: a worker admitting edges against the
+        frozen round base cannot see its peers' additions, so enforcing
+        the full capacity per worker lets W workers collectively
+        overshoot ``cap`` by up to a whole round block.  Instead, each
+        round a worker claiming ``rows`` of the round's ``total_rows``
+        edges gets ``base + ceil(headroom * rows / total_rows)`` per
+        partition — summed over workers the merged sizes respect the
+        hard alpha bound up to W-1 ceil-rounding edges per partition
+        per round, and because the total headroom always covers the
+        remaining edges (alpha >= 1), each worker's quota covers its
+        block, so the overflow chain keeps terminating.  ``cap`` is a
+        traced kernel argument, so the (k,) vector broadcasts where the
+        scalar did.  No-op when this worker owns the whole round
+        (shards=1 stays bit-identical; ragged final rounds get the full
+        headroom) and for partitioners without a capacity bound."""
+        cap = getattr(self, "cap", None)
+        if cap is None or base_sizes is None:
+            return
+        full = getattr(self, "_full_cap", None)
+        if rows >= total_rows:
+            # sole owner of the round: full headroom — and undo any
+            # earlier round's quota
+            if full is not None:
+                self.cap = full
+            return
+        if full is None:
+            self._full_cap = full = cap
+        base = np.asarray(base_sizes, np.int64)
+        head = np.maximum(np.asarray(full, np.int64) - base, 0)
+        self.cap = (base + -(-head * rows // total_rows)).astype(np.int32)
+
+    def end_shard_run(self) -> None:
+        """Undo ``begin_shard_round``'s per-round quota (finalize and any
+        later sequential use see the spec's true capacity)."""
+        full = getattr(self, "_full_cap", None)
+        if full is not None:
+            self.cap = full
+
 
 # ---------------------------------------------------------------------------
 # 2PS-L / 2PS-HDRF
@@ -370,6 +538,18 @@ class _TwoPSLPartitioner(StreamingPartitioner):
         self._track_hbits = self.hosted and sp.scoring == "2psl"
         if self.num_hosts:
             self._host_of_np = host_assignment(k, self.num_hosts)
+
+    def merge_rules(self):
+        # pre-partition: sizes accumulate, bits/hbits host-fold (OR); the
+        # clustering/mapping tables are prologue constants every worker
+        # derives identically.  scoring: the same bits/hbits move
+        # on-device (post-setup keys), same rules.
+        return {"sizes": "sum", "bits": "or", "hbits": "or",
+                "d": "constant", "vol": "constant", "v2c": "constant",
+                "c2p": "constant", "host_of": "constant",
+                "clus_v2c": "constant", "clus_vol": "constant",
+                "clus_degrees": "constant", "clus_max_vol": "constant",
+                "part_vol": "constant"}
 
     def _prepartition(self, st, pc):
         sizes, asg, _ = P._prepartition_core(
@@ -470,6 +650,9 @@ class _HDRFPartitioner(StreamingPartitioner):
         self.cap = capacity(stream.num_edges, k, self.spec.alpha)
         self._init_hierarchy(k)
 
+    def merge_rules(self):
+        return {"bits": "or", "sizes": "sum", "dpart": "sum"}
+
 
 # ---------------------------------------------------------------------------
 # stateless hashing family (DBH / Grid / Random)
@@ -523,6 +706,10 @@ class _HashPartitioner(StreamingPartitioner):
         # its prologue sweep here
         self.k = k
         self._init_hierarchy(k)
+
+    def merge_rules(self):
+        # host-folded bits/sizes; "d" is DBH's degree table (constant)
+        return {"bits": "or", "sizes": "sum", "d": "constant"}
 
 
 class _DBHPartitioner(_HashPartitioner):
@@ -620,6 +807,134 @@ def _traced_chunks(it, tracer, stall, start=0):
 
 
 _STREAM_END = object()
+
+
+@dataclass
+class _PassResult:
+    """One pipelined sweep's outcome: the end state plus the cursors and
+    host-time split the caller folds into timings/checkpoint meta."""
+    state: dict
+    assigned: int      # rows this sweep assigned (pass-count delta)
+    lo: int            # next assignment row
+    next_chunk: int    # next chunk index
+    wb_host: float     # host-side writeback seconds
+    ckpt_host: float   # checkpoint-save seconds (drain included)
+
+
+def _run_pass_pipeline(sp, state, stream, *, eff_chunk, depth, tracer,
+                       metrics, stall, write_rows, first_chunk=0,
+                       first_lo=0, assigned0=0, num_chunks=None,
+                       ckpt_every=None, save_state=None, pass_index=0):
+    """Drive one ``StreamPass``'s read -> dispatch -> writeback pipeline
+    over ``stream``'s chunks ``[first_chunk, first_chunk + num_chunks)``
+    (to the stream end when ``num_chunks`` is None).
+
+    This is the engine's inner loop, factored out so the sequential
+    driver (one call per pass, all chunks) and a shard worker (one call
+    per round, that rank's chunk range) share it byte-for-byte.
+    ``write_rows(lo, n, asg_np, merge) -> assigned`` abstracts the
+    assignment sink (global memmap vs rank-local slice);
+    ``save_state(next_chunk, state, lo, assigned)`` persists a
+    checkpoint after the pipeline drains (``ckpt_every`` chunks).
+    """
+    inflight: deque = deque()   # (lo, chunk_np, n, device asg, index)
+    assigned = assigned0
+    lo = first_lo
+    wb_host = 0.0               # host-side writeback seconds this sweep
+    ckpt_host = 0.0             # checkpoint-save seconds this sweep
+
+    inflight_gauge = metrics.gauge("engine.chunks_in_flight")
+    edges_ctr = metrics.counter("engine.edges_streamed")
+    chunks_ctr = metrics.counter("engine.chunks_total")
+    dispatch_hist = metrics.histogram("engine.dispatch_seconds")
+    writeback_hist = metrics.histogram("engine.writeback_seconds")
+
+    def _writeback():
+        nonlocal assigned, wb_host
+        w_lo, w_chunk, w_n, w_asg, w_i = inflight.popleft()
+        t0 = time.perf_counter()
+        w_asg = jax.block_until_ready(w_asg)
+        t1 = time.perf_counter()
+        asg_np = np.asarray(w_asg)[:w_n]
+        assigned += write_rows(w_lo, w_n, asg_np, sp.merge)
+        if sp.host_fold is not None:
+            sp.host_fold(w_chunk, asg_np)
+        t2 = time.perf_counter()
+        tracer.complete("device_wait", "writeback", t1 - t0, chunk=w_i)
+        tracer.complete("writeback", "writeback", t2 - t1, chunk=w_i)
+        stall.add("writeback", t2 - t0)
+        stall.attribute("device_wait", t1 - t0)
+        stall.attribute("host_write", t2 - t1)
+        writeback_hist.observe(t2 - t0)
+        wb_host += t2 - t1
+
+    def _save_checkpoint(next_chunk):
+        nonlocal ckpt_host
+        t0 = time.perf_counter()
+        # consistency barrier: drain the pipeline so state, the
+        # assignment rows below ``lo``, and the cursor all agree
+        while inflight:
+            _writeback()
+        jax.block_until_ready(state)
+        save_state(int(next_chunk), state, lo, assigned)
+        dt = time.perf_counter() - t0
+        ckpt_host += dt
+        tracer.complete("checkpoint", "robust", dt, pass_index=pass_index,
+                        next_chunk=int(next_chunk))
+        metrics.counter("engine.checkpoints").inc()
+
+    # wrap the raw iterator (prefetch-stage attribution in the producer
+    # thread), then apply the engine's bounded readahead — identical
+    # chunk sequence to stream.iter_chunks_prefetch
+    raw = stream.iter_chunks_from(eff_chunk, first_chunk)
+    if num_chunks is not None:
+        raw = itertools.islice(raw, num_chunks)
+    it = prefetch(_traced_chunks(raw, tracer, stall, start=first_chunk),
+                  readahead=depth - 1)
+    ci = first_chunk
+    try:
+        with tracer.span(f"pass:{sp.phase}", cat="engine",
+                         depth=depth, merge=sp.merge):
+            while True:
+                tq = time.perf_counter()
+                chunk = next(it, _STREAM_END)
+                wait = time.perf_counter() - tq
+                tracer.complete("queue_wait", "dispatch", wait, chunk=ci)
+                stall.attribute("queue_wait", wait)
+                if chunk is _STREAM_END:
+                    break
+                td = time.perf_counter()
+                pc = P.pad_chunk(chunk, eff_chunk)
+                state, asg = sp.chunk_fn(state, pc)
+                dt = time.perf_counter() - td
+                tracer.complete("dispatch", "dispatch", dt, chunk=ci)
+                stall.add("dispatch", dt)
+                dispatch_hist.observe(dt)
+                inflight.append((lo, chunk, pc.n, asg, ci))
+                inflight_gauge.set(len(inflight))
+                edges_ctr.inc(pc.n)
+                chunks_ctr.inc()
+                lo += pc.n
+                ci += 1
+                while len(inflight) >= depth:
+                    _writeback()
+                if ckpt_every and save_state is not None \
+                        and ci % ckpt_every == 0:
+                    _save_checkpoint(ci)
+            while inflight:
+                _writeback()
+            tdr = time.perf_counter()
+            jax.block_until_ready(state)
+            drain = time.perf_counter() - tdr
+            tracer.complete("device_wait", "writeback", drain,
+                            drain=True)
+            stall.attribute("device_wait", drain)
+    finally:
+        if hasattr(it, "close"):
+            it.close()              # joins the prefetch thread on error
+    return _PassResult(state=state, assigned=assigned, lo=lo,
+                       next_chunk=ci, wb_host=wb_host,
+                       ckpt_host=ckpt_host)
 
 
 def run_spec(spec: PartitionerSpec, stream: EdgeStream, k: int, *,
@@ -721,17 +1036,16 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
             assignment[:] = ckpt.assignment
         timer.lap("resume")
         metrics.counter("engine.resumes").inc()
+        # restoring mid-run state re-establishes the O(|V|) footprint the
+        # gauge advertises — a resumed process must not report 0
+        _set_replication_gauge(part, state, metrics)
     else:
         with tracer.span("init", cat="engine", algorithm=spec.algorithm,
                          k=k):
             state = part.init_state(stream, k, timer, degrees)
         assignment = _alloc_assignment(stream.num_edges, out_path)
     depth = spec.pipeline_depth
-    inflight_gauge = metrics.gauge("engine.chunks_in_flight")
     edges_ctr = metrics.counter("engine.edges_streamed")
-    chunks_ctr = metrics.counter("engine.chunks_total")
-    dispatch_hist = metrics.histogram("engine.dispatch_seconds")
-    writeback_hist = metrics.histogram("engine.writeback_seconds")
 
     resumes = int(ckpt.meta["resumes"]) + 1 if ckpt is not None else 0
     checkpoints_written = 0
@@ -741,6 +1055,7 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
         if ckpt is not None else {})
     pass_stalls = []
     passes_wall = 0.0
+    write_rows = _assignment_writer(assignment)
     for pi, sp in enumerate(part.passes()):
         if pi < start_pass:
             continue                # completed before the checkpoint
@@ -751,48 +1066,11 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
             with tracer.span("setup", cat="engine", phase=sp.phase):
                 state = sp.setup(state)
         stall = StallClock()
-        inflight: deque = deque()   # (lo, chunk_np, n, device asg, index)
-        assigned = int(ckpt.meta["assigned"]) if resuming_here else 0
-        lo = int(ckpt.meta["edge_lo"]) if resuming_here else 0
-        first_chunk = int(ckpt.meta["next_chunk"]) if resuming_here else 0
-        wb_host = 0.0               # host-side writeback seconds this pass
-        ckpt_host = 0.0             # checkpoint-save seconds this pass
 
-        def _writeback():
-            nonlocal assigned, wb_host
-            w_lo, w_chunk, w_n, w_asg, w_i = inflight.popleft()
-            t0 = time.perf_counter()
-            w_asg = jax.block_until_ready(w_asg)
-            t1 = time.perf_counter()
-            asg_np = np.asarray(w_asg)[:w_n]
-            if sp.merge:
-                sel = asg_np >= 0
-                assignment[w_lo:w_lo + w_n][sel] = asg_np[sel]
-                assigned += int(sel.sum())
-            else:
-                assignment[w_lo:w_lo + w_n] = asg_np
-                assigned += int((asg_np >= 0).sum())
-            if sp.host_fold is not None:
-                sp.host_fold(w_chunk, asg_np)
-            t2 = time.perf_counter()
-            tracer.complete("device_wait", "writeback", t1 - t0, chunk=w_i)
-            tracer.complete("writeback", "writeback", t2 - t1, chunk=w_i)
-            stall.add("writeback", t2 - t0)
-            stall.attribute("device_wait", t1 - t0)
-            stall.attribute("host_write", t2 - t1)
-            writeback_hist.observe(t2 - t0)
-            wb_host += t2 - t1
-
-        def _save_checkpoint(next_chunk):
-            nonlocal checkpoints_written, ckpt_host
+        def _save_state(next_chunk, st, lo, assigned, *, _pi=pi):
+            nonlocal checkpoints_written
             from ..robust import checkpoint as _ck
-            t0 = time.perf_counter()
-            # consistency barrier: drain the pipeline so state, the
-            # assignment rows below ``lo``, and the cursor all agree
-            while inflight:
-                _writeback()
-            jax.block_until_ready(state)
-            if not isinstance(state, dict):
+            if not isinstance(st, dict):
                 raise TypeError("engine checkpointing requires the "
                                 "partitioner state to be a flat dict of "
                                 "arrays")
@@ -806,28 +1084,17 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
                     "num_edges": int(stream.num_edges),
                     "num_vertices": int(stream.num_vertices),
                     "chunk_size": int(spec.chunk_size),
-                    "pass_index": pi, "next_chunk": int(next_chunk),
+                    "pass_index": _pi, "next_chunk": int(next_chunk),
                     "edge_lo": int(lo), "assigned": int(assigned),
                     "pass_counts": dict(pass_counts),
                     "resumes": resumes,
                     "assignment_in_checkpoint": asg_copy is not None}
             _ck.save_engine_checkpoint(ckpt_dir, _ck.EngineCheckpoint(
                 meta=meta,
-                device_state={n: np.asarray(v) for n, v in state.items()},
+                device_state={n: np.asarray(v) for n, v in st.items()},
                 host_state=part.host_state(), assignment=asg_copy))
-            dt = time.perf_counter() - t0
-            ckpt_host += dt
             checkpoints_written += 1
-            tracer.complete("checkpoint", "robust", dt, pass_index=pi,
-                            next_chunk=int(next_chunk))
-            metrics.counter("engine.checkpoints").inc()
-            # deterministic crash hook for the crash-resume tests and the
-            # CI smoke stage: die hard (no atexit, no flush) after the
-            # nth successful checkpoint write
-            limit = int(os.environ.get("REPRO_CRASH_AFTER_CHECKPOINTS",
-                                       "0") or 0)
-            if limit and checkpoints_written >= limit:
-                os._exit(137)
+            _ck.crash_after_checkpoints(checkpoints_written)
 
         # buffered re-streaming regroups the stream into windows of
         # ``window`` engine chunks; every cursor below (checkpointing
@@ -835,59 +1102,23 @@ def _run_spec_traced(spec, stream, k, out_path, degrees, tracer, metrics,
         # whose window size derives from the same spec — replays from
         # the identical boundary
         eff_chunk = spec.chunk_size * max(1, int(sp.window))
-        # wrap the raw iterator (prefetch-stage attribution in the
-        # producer thread), then apply the engine's bounded readahead —
-        # identical chunk sequence to stream.iter_chunks_prefetch
-        it = prefetch(_traced_chunks(
-                          stream.iter_chunks_from(eff_chunk,
-                                                  first_chunk),
-                          tracer, stall, start=first_chunk),
-                      readahead=depth - 1)
-        ci = first_chunk
-        try:
-            with tracer.span(f"pass:{sp.phase}", cat="engine",
-                             depth=depth, merge=sp.merge):
-                while True:
-                    tq = time.perf_counter()
-                    chunk = next(it, _STREAM_END)
-                    wait = time.perf_counter() - tq
-                    tracer.complete("queue_wait", "dispatch", wait, chunk=ci)
-                    stall.attribute("queue_wait", wait)
-                    if chunk is _STREAM_END:
-                        break
-                    td = time.perf_counter()
-                    pc = P.pad_chunk(chunk, eff_chunk)
-                    state, asg = sp.chunk_fn(state, pc)
-                    dt = time.perf_counter() - td
-                    tracer.complete("dispatch", "dispatch", dt, chunk=ci)
-                    stall.add("dispatch", dt)
-                    dispatch_hist.observe(dt)
-                    inflight.append((lo, chunk, pc.n, asg, ci))
-                    inflight_gauge.set(len(inflight))
-                    edges_ctr.inc(pc.n)
-                    chunks_ctr.inc()
-                    lo += pc.n
-                    ci += 1
-                    while len(inflight) >= depth:
-                        _writeback()
-                    if ckpt_every and ci % ckpt_every == 0:
-                        _save_checkpoint(ci)
-                while inflight:
-                    _writeback()
-                tdr = time.perf_counter()
-                jax.block_until_ready(state)
-                drain = time.perf_counter() - tdr
-                tracer.complete("device_wait", "writeback", drain,
-                                drain=True)
-                stall.attribute("device_wait", drain)
-        finally:
-            if hasattr(it, "close"):
-                it.close()          # joins the prefetch thread on error
-        timer.lap(sp.phase, exclude=wb_host + ckpt_host)
-        timer.add("writeback", wb_host)
-        if ckpt_host:
-            timer.add("checkpoint", ckpt_host)
-        pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + assigned
+        pr = _run_pass_pipeline(
+            sp, state, stream, eff_chunk=eff_chunk, depth=depth,
+            tracer=tracer, metrics=metrics, stall=stall,
+            write_rows=write_rows,
+            first_chunk=int(ckpt.meta["next_chunk"]) if resuming_here
+            else 0,
+            first_lo=int(ckpt.meta["edge_lo"]) if resuming_here else 0,
+            assigned0=int(ckpt.meta["assigned"]) if resuming_here else 0,
+            ckpt_every=ckpt_every,
+            save_state=_save_state if ckpt_dir is not None else None,
+            pass_index=pi)
+        state = pr.state
+        timer.lap(sp.phase, exclude=pr.wb_host + pr.ckpt_host)
+        timer.add("writeback", pr.wb_host)
+        if pr.ckpt_host:
+            timer.add("checkpoint", pr.ckpt_host)
+        pass_counts[sp.phase] = pass_counts.get(sp.phase, 0) + pr.assigned
         ps = stall.report(sp.phase)
         pass_stalls.append(ps)
         passes_wall += ps.wall_seconds

@@ -74,7 +74,10 @@ def _least_loaded_rounds(assignment, pending, sizes, cap, k):
         assignment, sizes, i = carry
         un = pending & (assignment < 0)
         t = jnp.argmin(sizes).astype(jnp.int32)
-        rem = jnp.maximum(cap - sizes[t], 0)
+        # cap may be a scalar or a per-partition (k,) vector (sharded
+        # runs quota each worker's headroom per round)
+        rem = jnp.maximum(jnp.broadcast_to(cap, sizes.shape)[t]
+                          - sizes[t], 0)
         rank = jnp.cumsum(un.astype(jnp.int32)) - 1
         take = un & (rank < rem)
         assignment = jnp.where(take, t, assignment)

@@ -46,7 +46,8 @@ import numpy as np
 
 from .integrity import save_json_atomic
 
-__all__ = ["CheckpointMismatchError", "EngineCheckpoint", "latest_checkpoint",
+__all__ = ["CheckpointMismatchError", "EngineCheckpoint",
+           "crash_after_checkpoints", "latest_checkpoint",
            "load_engine_checkpoint", "save_engine_checkpoint", "spec_hash"]
 
 _PREFIX = "ckpt_"
@@ -90,6 +91,16 @@ class EngineCheckpoint:
     device_state: dict = field(default_factory=dict)
     host_state: dict = field(default_factory=dict)
     assignment: np.ndarray | None = None
+
+
+def crash_after_checkpoints(written: int) -> None:
+    """Deterministic crash hook for the crash-resume tests and the CI
+    smoke stages: die hard (``os._exit`` — no atexit, no flush) once
+    ``written`` reaches ``REPRO_CRASH_AFTER_CHECKPOINTS``.  A no-op when
+    the environment variable is unset or 0."""
+    limit = int(os.environ.get("REPRO_CRASH_AFTER_CHECKPOINTS", "0") or 0)
+    if limit and written >= limit:
+        os._exit(137)
 
 
 def _dirname(pass_index: int, next_chunk: int) -> str:

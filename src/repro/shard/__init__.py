@@ -1,0 +1,20 @@
+"""repro.shard — sharded multi-worker partitioning (docs/distributed.md).
+
+N workers each stream a disjoint share of the edge chunks through the
+same pass pipeline as the sequential engine; the O(|V|) partitioner
+state is exchanged and merged at round boundaries
+(``StreamingPartitioner.merge_rules`` — commutative + associative, so
+every rank computes the identical merge locally).  ``run_spec_sharded``
+is the in-process emulated driver; ``repro.launch.dist_partition``
+drives real multi-process runs over the same ``run_worker``.
+"""
+from .backends import (ExchangeTimeout, FileExchange,
+                       JaxDistributedExchange, ThreadExchange)
+from .engine import (ShardLayout, ShardWorkerResult, finalize_shard_run,
+                     run_spec_sharded, run_worker)
+from .state import ShardState
+
+__all__ = ["ExchangeTimeout", "FileExchange", "JaxDistributedExchange",
+           "ShardLayout", "ShardState", "ShardWorkerResult",
+           "ThreadExchange", "finalize_shard_run", "run_spec_sharded",
+           "run_worker"]

@@ -106,3 +106,59 @@ def test_cli_io_retries_flag(graph_bin, tmp_path):
              "2")
     assert p.returncode == 0, p.stderr
     assert json.loads(p.stdout)["io_retries"] == 0   # healthy stream
+
+
+# ---------------------------------------------------------------------------
+# sharded crash drill: kill ONE worker of a multi-process run, resume it
+# ---------------------------------------------------------------------------
+
+def _dist_cmd(graph_bin, artifact_dir, *extra):
+    return [sys.executable, "-m", "repro.launch.dist_partition",
+            "--input", graph_bin, "--k", "8", "--algorithm", "2psl",
+            "--chunk-size", "512", "--workers", "2", "--backend", "fs",
+            "--artifact-dir", artifact_dir, "--no-plan",
+            "--checkpoint-every", "1", "--timeout", "240", "--json",
+            *extra]
+
+
+@pytest.mark.slow
+def test_dist_kill_one_worker_and_resume(graph_bin, tmp_path):
+    """A 2-worker fs-backend run loses rank 1 to a hard kill
+    (REPRO_CRASH_AFTER_CHECKPOINTS -> os._exit after its first
+    round-boundary checkpoint) while rank 0 blocks at the next
+    rendezvous; relaunching rank 1 with --resume re-joins mid-pass via
+    its checkpoint + the peers' persisted round states, and the stitched
+    artifact is byte-identical to the no-crash run."""
+    env = dict(os.environ,
+               PYTHONPATH=_SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                             ""))
+    clean_dir = str(tmp_path / "clean")
+    p = subprocess.run(_dist_cmd(graph_bin, clean_dir), env=env,
+                       capture_output=True, text=True)
+    assert p.returncode == 0, p.stderr
+    clean_sha = _sha(os.path.join(clean_dir, "assignment.bin"))
+
+    crash_dir = str(tmp_path / "crash")
+    cmd = _dist_cmd(graph_bin, crash_dir)
+    p0 = subprocess.Popen(cmd + ["--rank", "0"], env=env,
+                          stdout=subprocess.DEVNULL,
+                          stderr=subprocess.DEVNULL)
+    try:
+        env_crash = dict(env, REPRO_CRASH_AFTER_CHECKPOINTS="1")
+        p1 = subprocess.Popen(cmd + ["--rank", "1"], env=env_crash,
+                              stdout=subprocess.DEVNULL,
+                              stderr=subprocess.DEVNULL)
+        assert p1.wait(timeout=240) == 137      # died hard, post-checkpoint
+        assert p0.poll() is None, "rank 0 must be waiting, not dead"
+        # no crash env this time: rank 1 resumes from its round checkpoint
+        p1b = subprocess.Popen(cmd + ["--rank", "1", "--resume"], env=env,
+                               stdout=subprocess.DEVNULL)
+        assert p1b.wait(timeout=240) == 0
+        assert p0.wait(timeout=240) == 0
+    finally:
+        if p0.poll() is None:
+            p0.kill()
+    assert _sha(os.path.join(crash_dir, "assignment.bin")) == clean_sha
+    manifest = json.load(open(os.path.join(crash_dir, "manifest.json")))
+    assert manifest["shards"]["num_shards"] == 2
+    assert manifest["extras"]["resumes"] >= 1

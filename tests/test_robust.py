@@ -117,6 +117,32 @@ def test_resilient_stream_backoff_schedule():
     assert [p.backoff_s(a) for a in range(4)] == [0.01, 0.02, 0.03, 0.03]
 
 
+def test_resilient_stream_offset_faults_heal(stream):
+    """iter_chunks_from at a non-zero start: faults beyond the offset are
+    retried against the *absolute* chunk index (what a resumed run — or a
+    shard worker whose round starts mid-stream — replays through)."""
+    fs = FaultyStream(stream, [ChunkFault(3, "ioerror", count=2),
+                               ChunkFault(5, "corrupt", count=1)])
+    rs = ResilientStream(fs, _NO_SLEEP)
+    got = list(rs.iter_chunks_from(512, 2))
+    clean = list(stream.iter_chunks(512))[2:]
+    assert len(got) == len(clean)
+    for g, c in zip(got, clean):
+        np.testing.assert_array_equal(g, c)
+    assert rs.retries == 3
+
+
+def test_resilient_stream_offset_exhaustion(stream):
+    """Retry budgets apply identically mid-stream: a persistent fault a
+    few chunks past the start offset still exhausts into ChunkReadError
+    after max_retries, not an infinite loop."""
+    fs = FaultyStream(stream, [ChunkFault(4, "ioerror", count=10 ** 9)])
+    rs = ResilientStream(fs, RetryPolicy(max_retries=2, backoff_base_s=0.0))
+    with pytest.raises(ChunkReadError, match="giving up"):
+        list(rs.iter_chunks_from(512, 3))
+    assert rs.retries == 2
+
+
 def test_run_spec_retry_policy_is_bit_identical(seed_graph, stream):
     clean = run_spec(spec_for("2psl", chunk_size=512), stream, 8)
     faulty = FaultyStream(_fresh(seed_graph),
